@@ -1,0 +1,51 @@
+"""Regenerate the §Dry-run / §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts.  Keeps hand-written sections (everything outside the
+AUTO-GENERATED markers) intact."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import roofline
+
+BEGIN = "<!-- AUTO-ROOFLINE-BEGIN -->"
+END = "<!-- AUTO-ROOFLINE-END -->"
+
+
+def build() -> str:
+    lines = []
+    for mesh, label in [("single", "single pod (16x16 = 256 chips)"),
+                        ("multi", "two pods (2x16x16 = 512 chips)")]:
+        cells = roofline.table(mesh)
+        ok = [c for c in cells if c["status"] == "ok"]
+        skipped = [c for c in cells if c["status"] == "skipped"]
+        lines.append(f"\n### Mesh: {label}\n")
+        lines.append(f"{len(ok)} compiled cells, {len(skipped)} assignment-mandated skips "
+                     f"(long_500k on pure full-attention archs).\n")
+        lines.append(roofline.markdown_table(mesh))
+        lines.append("")
+    cand = roofline.hillclimb_candidates()
+    if cand:
+        lines.append("\n### Hillclimb candidates (single-pod)\n")
+        for k, v in cand.items():
+            lines.append(f"* **{k}**: {v['arch']} x {v['shape']} — dominant {v['dominant']}, "
+                         f"fraction {v['roofline_fraction']:.3f}, "
+                         f"collective {v['collective_s']:.3f}s")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    pre, rest = text.split(BEGIN, 1)
+    _, post = rest.split(END, 1)
+    open(path, "w").write(pre + BEGIN + "\n" + build() + "\n" + END + post)
+    print("EXPERIMENTS.md roofline section regenerated")
+
+
+if __name__ == "__main__":
+    main()

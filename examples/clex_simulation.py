@@ -1,0 +1,33 @@
+"""Reproduce the paper's Figure 3 + Tables I-IV at configurable scale.
+
+  PYTHONPATH=src python examples/clex_simulation.py            # reduced
+  PYTHONPATH=src python examples/clex_simulation.py --full     # 32^4 / 64^3
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.paper_tables import run_all_tables
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for res in run_all_tables(full=args.full):
+        print(f"\n== {res['name']} ({res['mode']}, {res['n_nodes']} nodes, "
+              f"{res['msgs_per_node']} msgs/node, {res['wall_s']}s) ==")
+        for row in res["rows"]:
+            paper = row.get("paper")
+            extra = f"   paper(max_rds,avg_rds,load,hops)={paper}" if paper else ""
+            print(f"  lvl {row['lvl']}: max_rds={row['max_rds']} avg_rds={row['avg_rds']} "
+                  f"load={row['max_avg_load']} hops={row['avg_hops']}{extra}")
+        print(f"  derived: {res['derived']}"
+              + (f"   paper: prop/hop/bw={res['paper_derived']}" if res["paper_derived"] else ""))
+
+
+if __name__ == "__main__":
+    main()

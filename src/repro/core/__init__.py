@@ -1,0 +1,42 @@
+"""CLEX core: topology, routing, simulation, analysis, and the JAX
+hierarchical collectives that port the paper's technique to TPU meshes."""
+
+from .analysis import DerivedComparison, all_to_all_comparison, derive_comparison
+from .routing import (
+    all_to_all_tree_hops,
+    bundle_hop,
+    copy_schedule,
+    log_star,
+    sample_gateways,
+    unrolled_schedule,
+    valiant_intermediate,
+)
+from .simulator import (
+    LevelStats,
+    SimulationResult,
+    simulate_point_to_point,
+    uniform_permutation_traffic,
+)
+from .topology import CLEXTopology, TorusTopology, copy_index, digit, with_digit
+
+__all__ = [
+    "CLEXTopology",
+    "TorusTopology",
+    "DerivedComparison",
+    "LevelStats",
+    "SimulationResult",
+    "all_to_all_comparison",
+    "all_to_all_tree_hops",
+    "bundle_hop",
+    "copy_index",
+    "copy_schedule",
+    "derive_comparison",
+    "digit",
+    "log_star",
+    "sample_gateways",
+    "simulate_point_to_point",
+    "uniform_permutation_traffic",
+    "unrolled_schedule",
+    "valiant_intermediate",
+    "with_digit",
+]

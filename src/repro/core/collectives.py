@@ -1,0 +1,258 @@
+"""CLEX-inspired hierarchical collectives (DESIGN.md Sec. 3).
+
+A TPU multi-pod machine is a physical CLEX-like hierarchy: the innermost
+mesh axis rides short intra-pod ICI links (the paper's level-1 clique), the
+``pod`` axis rides scarce long links (top-level bundles).  The paper's
+routing discipline maps onto collective schedules:
+
+* ``hierarchical_all_reduce`` — A(2)-style staged gradient sync:
+  reduce-scatter on the low (cheap) axes, all-reduce only shards across the
+  top (expensive) axis, all-gather back on the low axes.  Cross-pod bytes
+  drop by the low-axis size (16x on the production mesh).
+* ``compressed_psum`` — the asymmetric-bandwidth principle taken further:
+  int8 error-feedback quantisation applied only to top-level traffic.
+* ``two_stage_all_to_all`` — the A(2) recursion itself: route within the
+  clique to the gateway (a2a over the low axis grouping by destination
+  super-shard), one hop across the bundle (a2a over the high axis), then
+  deliver locally.  Used by expert-parallel MoE dispatch when experts span
+  more than one mesh axis.
+
+All functions are *manual-collective* primitives: call them inside
+``jax.shard_map`` regions whose ``axis_names`` include the axes used.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "hierarchical_all_reduce",
+    "compressed_psum",
+    "quantize_int8",
+    "dequantize_int8",
+    "two_stage_all_to_all",
+    "CollectiveCostModel",
+]
+
+
+def _axis_size(name: str) -> int:
+    return jax.lax.axis_size(name)
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantisation.  Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(x: jax.Array, axis: str) -> tuple[jax.Array, jax.Array]:
+    """All-reduce over ``axis`` moving int8 + one fp32 scale per shard
+    instead of full-precision tensors (4x fewer bytes than fp32, 2x vs
+    bf16).  Implemented as quantise -> all_gather -> local dequant-sum,
+    which is byte-optimal for the small pod counts where this applies.
+
+    Returns (sum, quantisation_error) — feed the error back into the next
+    step's gradients (error feedback) to keep convergence unbiased.
+    """
+    q, scale = quantize_int8(x)
+    err = x - dequantize_int8(q, scale, x.dtype)
+    qs = jax.lax.all_gather(q, axis)  # [P, ...] int8
+    ss = jax.lax.all_gather(scale, axis)  # [P]
+    shape = (-1,) + (1,) * (q.ndim)
+    total = jnp.sum(qs.astype(jnp.float32) * ss.reshape(shape), axis=0)
+    return total.astype(x.dtype), err
+
+
+def error_feedback_slots(params, n_low: int):
+    """Zero residual slots matching the reduce-scattered shard shapes of
+    ``hierarchical_all_reduce`` with one low axis of size ``n_low``."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((-(-p.size // n_low),), jnp.float32), params
+    )
+
+
+def hierarchical_all_reduce(
+    tree,
+    low_axes: Sequence[str] = ("data",),
+    high_axis: str | None = "pod",
+    average: bool = True,
+    compress_high: bool = False,
+    residuals=None,
+):
+    """CLEX-staged all-reduce of a gradient pytree.
+
+    reduce-scatter(low) -> [compressed] all-reduce(high) -> all-gather(low).
+    Flat equivalent: psum over low+high.  The staged schedule sends
+    1/prod(low) of the bytes across ``high_axis`` — the paper's rule of
+    pushing traffic down to the cheap levels; ``compress_high`` quantises
+    the (already 1/n_low-sized) cross-pod traffic to int8 with error
+    feedback: pass the previous step's ``residuals``
+    (``error_feedback_slots``) and carry the returned ones forward.
+
+    Returns (reduced_tree, residual_tree).
+    """
+    denom = 1.0
+    for ax in low_axes:
+        denom *= _axis_size(ax)
+    if high_axis is not None:
+        denom *= _axis_size(high_axis)
+    if residuals is None:
+        residuals = jax.tree.map(lambda _: None, tree, is_leaf=lambda x: x is None)
+
+    def reduce_leaf(g, res):
+        orig_shape = g.shape
+        flat = g.reshape(-1).astype(jnp.float32)
+        chunk = flat
+        for ax in low_axes:
+            size = _axis_size(ax)
+            if chunk.shape[0] % size:
+                pad = size - chunk.shape[0] % size
+                chunk = jnp.concatenate([chunk, jnp.zeros((pad,), chunk.dtype)])
+            chunk = jax.lax.psum_scatter(chunk, ax, scatter_dimension=0, tiled=True)
+        err = jnp.zeros_like(chunk)
+        if high_axis is not None:
+            if compress_high:
+                if res is not None:
+                    chunk = chunk + res
+                chunk, err = compressed_psum(chunk, high_axis)
+            else:
+                chunk = jax.lax.psum(chunk, high_axis)
+        for ax in reversed(low_axes):
+            chunk = jax.lax.all_gather(chunk, ax, axis=0, tiled=True)
+        total = chunk[: flat.shape[0]].reshape(orig_shape)
+        if average:
+            total = total / denom
+        return total.astype(g.dtype), err
+
+    leaves, treedef = jax.tree.flatten(tree)
+    res_leaves = jax.tree.leaves(residuals) if compress_high and residuals else [None] * len(leaves)
+    if len(res_leaves) != len(leaves):
+        res_leaves = [None] * len(leaves)
+    out = [reduce_leaf(g, r) for g, r in zip(leaves, res_leaves)]
+    reduced = treedef.unflatten([t for t, _ in out])
+    errors = treedef.unflatten([e for _, e in out])
+    return reduced, errors
+
+
+def two_stage_all_to_all(
+    x: jax.Array,
+    low_axis: str,
+    high_axis: str,
+    split_axis: int = 0,
+    concat_axis: int = 0,
+):
+    """A(2) as a collective: all-to-all across the product axis
+    (low x high) staged as (i) a2a over ``low_axis`` grouping entries by
+    destination high-shard (route to the gateway inside the clique), then
+    (ii) a2a over ``high_axis`` (the bundle hop).
+
+    ``x`` is split along ``split_axis`` into low*high equal destination
+    groups ordered as (high, low) major/minor.  The result concatenates
+    source shards along ``concat_axis`` in the same (high, low) order,
+    exactly matching a flat ``all_to_all`` over a ("high","low") product
+    axis — verified in tests.
+    """
+    nl, nh = _axis_size(low_axis), _axis_size(high_axis)
+    assert x.shape[split_axis] % (nl * nh) == 0
+    # stage 1: within the clique, regroup so each low-rank holds the traffic
+    # of its gateway slot for every destination high-shard
+    x = _moveaxis_split(x, split_axis, nh * nl)
+    # x now [nh*nl, ...]: destination groups, (high, low) order
+    x = x.reshape((nh, nl) + x.shape[1:])
+    x = jax.lax.all_to_all(x, low_axis, split_axis=1, concat_axis=1, tiled=False)
+    # each low-rank now holds [nh, 1, src_low, ...] -> hop across the bundle
+    x = jax.lax.all_to_all(x, high_axis, split_axis=0, concat_axis=0, tiled=False)
+    # x [nh(src_high), src_low? ...] reorder to (src_high, src_low) flat groups
+    x = x.reshape((nh * nl,) + x.shape[2:])
+    return _merge_to_axis(x, concat_axis)
+
+
+def _moveaxis_split(x, split_axis, groups):
+    """[... split ...] -> [groups, ... split/groups ...]."""
+    shape = x.shape
+    new = shape[:split_axis] + (groups, shape[split_axis] // groups) + shape[split_axis + 1 :]
+    x = x.reshape(new)
+    return jnp.moveaxis(x, split_axis, 0)
+
+
+def _merge_to_axis(x, concat_axis):
+    """[groups, ...] -> merge groups into ``concat_axis``."""
+    x = jnp.moveaxis(x, 0, concat_axis)
+    shape = x.shape
+    new = shape[:concat_axis] + (shape[concat_axis] * shape[concat_axis + 1],) + shape[
+        concat_axis + 2 :
+    ]
+    return x.reshape(new)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveCostModel:
+    """Byte/latency model for flat vs hierarchical schedules (used by the
+    roofline report and the collective benchmarks).
+
+    ici_bw:  per-link intra-pod bandwidth (bytes/s)
+    dcn_bw:  per-chip cross-pod bandwidth (bytes/s) — the scarce level
+    """
+
+    ici_bw: float = 50e9  # ~50 GB/s/link ICI (assignment constants)
+    dcn_bw: float = 6.25e9  # ~1/8 of ICI: cross-pod links are the slow level
+    ici_latency: float = 1e-6  # per-message setup/hop overhead (CLEX's c_h)
+    dcn_latency: float = 10e-6
+
+    def flat_all_reduce(self, bytes_per_chip: float, n_low: int, n_pods: int) -> float:
+        """Ring all-reduce over the full (low x pod) group: every byte
+        crosses the pod boundary ~once; bottleneck is the slow link."""
+        group = n_low * n_pods
+        wire = 2.0 * bytes_per_chip * (group - 1) / group
+        bw = self.dcn_bw if n_pods > 1 else self.ici_bw
+        lat = self.dcn_latency if n_pods > 1 else self.ici_latency
+        return wire / bw + 2 * (group - 1) * lat
+
+    def hierarchical_all_reduce(
+        self, bytes_per_chip: float, n_low: int, n_pods: int, compress_ratio: float = 1.0
+    ) -> float:
+        rs = bytes_per_chip * (n_low - 1) / n_low / self.ici_bw + (n_low - 1) * self.ici_latency
+        shard = bytes_per_chip / n_low * compress_ratio
+        ar_high = (
+            2.0 * shard * (n_pods - 1) / n_pods / self.dcn_bw
+            + 2 * (n_pods - 1) * self.dcn_latency
+            if n_pods > 1
+            else 0.0
+        )
+        ag = bytes_per_chip * (n_low - 1) / n_low / self.ici_bw + (n_low - 1) * self.ici_latency
+        return rs + ar_high + ag
+
+    def flat_all_to_all(self, bytes_per_chip: float, n_low: int, n_pods: int) -> float:
+        """Direct flows to every peer: (group-1) messages per chip, of which
+        (group - n_low) cross the pod boundary individually — the many-small-
+        flows regime the CLEX delay analysis penalises."""
+        group = n_low * n_pods
+        cross = bytes_per_chip * (group - n_low) / group  # bytes leaving the pod
+        local = bytes_per_chip * (n_low - 1) / group
+        wire = max(cross / self.dcn_bw, local / self.ici_bw) if n_pods > 1 else (
+            local / self.ici_bw
+        )
+        lat = (n_low - 1) * self.ici_latency + (group - n_low) * self.dcn_latency
+        return wire + lat
+
+    def two_stage_all_to_all(self, bytes_per_chip: float, n_low: int, n_pods: int) -> float:
+        """A(2): aggregate inside the clique, then n_pods-1 large bundle
+        hops — same bytes, exponentially fewer cross-pod messages."""
+        stage1 = bytes_per_chip * (n_low - 1) / n_low / self.ici_bw + (n_low - 1) * self.ici_latency
+        stage2 = (
+            bytes_per_chip * (n_pods - 1) / n_pods / self.dcn_bw
+            + (n_pods - 1) * self.dcn_latency
+            if n_pods > 1
+            else 0.0
+        )
+        return stage1 + stage2

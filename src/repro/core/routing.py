@@ -1,0 +1,163 @@
+"""Routing primitives for CLEX (paper Sec. II-C/II-D).
+
+Pure, vectorised (numpy) digit-arithmetic helpers shared by the simulator
+and the tests:
+
+* the recursive call schedule of A(l)  (A(l) = A(l-1), HOP_l, A(l-1));
+* gateway sampling (Step 1 interim destinations);
+* bundle-hop target computation (Step 2);
+* the copy-count schedule k(i) of the clique load balancer A(1)
+  (k(i+1) = min(k(i) * e^{floor(k(i))/5}, sqrt(log n)), paper Sec. II-D);
+* log* and the all-to-all flooding schedule (Sec. II-C).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Iterator
+
+import numpy as np
+
+from .topology import CLEXTopology, copy_index, digit
+
+__all__ = [
+    "log_star",
+    "copy_schedule",
+    "unrolled_schedule",
+    "sample_gateways",
+    "bundle_hop",
+    "all_to_all_tree_hops",
+    "valiant_intermediate",
+]
+
+
+def log_star(x: float) -> int:
+    """Inverse tower function: log* x = 1 for x <= 2, else 1 + log* log2 x."""
+    if x <= 2:
+        return 1
+    return 1 + log_star(math.log2(x))
+
+
+def copy_schedule(m: int, max_phases: int = 64) -> list[int]:
+    """floor(k(i)) for phases i = 1, 2, ... of A(1) on a clique of m nodes.
+
+    k(1) = 1;  k(i+1) = min(k(i) * e^{floor(k(i))/5}, sqrt(log2 m')), where the
+    cap follows [23] (we use the instance size for m').  Phase 1 of the
+    simulator is the direct-send round, so its entry is conventionally 0
+    (no relay copies).
+    """
+    cap = max(2.0, math.sqrt(math.log2(max(m, 4))))
+    ks = [0.0]  # phase 1: direct send, no copies
+    k = 1.0
+    for _ in range(max_phases - 1):
+        ks.append(k)
+        k = min(k * math.exp(math.floor(k) / 5.0), cap)
+    return [int(math.floor(v)) for v in ks]
+
+
+def unrolled_schedule(L: int) -> list[int]:
+    """The iterative order of operations of A(L): 0 denotes an A(1) (clique
+    load-balancing) call, l >= 2 a level-l bundle hop.
+
+    seq(1) = [0];  seq(l) = seq(l-1) + [l] + seq(l-1).
+
+    For L=4: [0,2,0,3,0,2,0,4,0,2,0,3,0,2,0] — 8 LB calls, 4/2/1 hops on
+    levels 2/3/4, matching the paper's per-level hop counts exactly.
+    """
+    if L == 1:
+        return [0]
+    inner = unrolled_schedule(L - 1)
+    return inner + [L] + inner
+
+
+def sample_gateways(
+    topo: CLEXTopology, cur: np.ndarray, dest: np.ndarray, level: int, rng: np.random.Generator
+) -> np.ndarray:
+    """Step 1 interim destinations of A(level) (paper Sec. II-D):
+
+    a u.i.r. node of ``cur``'s level-(l-1) copy whose level-l bundle leads to
+    the copy containing ``dest`` — i.e. digit l-2 equals dest's digit l-1,
+    digits 0..l-3 uniform, digits >= l-1 those of ``cur``.
+    """
+    m = topo.m
+    base = copy_index(cur, level - 1, m) * m ** (level - 1)
+    b = digit(dest, level - 1, m)
+    low_span = m ** (level - 2)
+    lows = rng.integers(0, low_span, size=cur.shape[0], dtype=np.int64) if low_span > 1 else 0
+    return base + b * low_span + lows
+
+
+def _per_key_ranks(keys: np.ndarray, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    """Random ranks 0..q-1 within each group of equal ``keys``.
+
+    Returns (ranks, order) where ``order`` is the applied permutation such
+    that keys[order] is sorted and ranks are with respect to the original
+    array layout.
+    """
+    n = keys.shape[0]
+    shuffle = rng.permutation(n)
+    order = shuffle[np.argsort(keys[shuffle], kind="stable")]
+    sorted_keys = keys[order]
+    starts = np.empty(n, dtype=bool)
+    if n:
+        starts[0] = True
+        np.not_equal(sorted_keys[1:], sorted_keys[:-1], out=starts[1:])
+    idx = np.arange(n, dtype=np.int64)
+    group_start = np.maximum.accumulate(np.where(starts, idx, 0))
+    ranks_sorted = idx - group_start
+    ranks = np.empty(n, dtype=np.int64)
+    ranks[order] = ranks_sorted
+    return ranks, order
+
+
+def bundle_hop(
+    topo: CLEXTopology,
+    cur: np.ndarray,
+    dest: np.ndarray,
+    level: int,
+    rng: np.random.Generator,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Step 2 of A(level): every message crosses its gateway's level-l bundle,
+    load-balanced over the bundle's m edges (surplus edges chosen u.a.r. via a
+    per-gateway random permutation).
+
+    Returns (new_positions, rounds) where rounds[i] >= 1 is the round in which
+    message i crossed (ceil((rank+1)/m) for its random rank at its gateway).
+    """
+    m = topo.m
+    b = digit(dest, level - 1, m)
+    ranks, _ = _per_key_ranks(cur, rng)
+    # per-gateway random permutation of edge indices via per-(gateway, slot) keys
+    slot = ranks % m
+    gw_ids, gw_inv = np.unique(cur, return_inverse=True)
+    perms = np.argsort(rng.random((gw_ids.shape[0], m)), axis=1)
+    edge = perms[gw_inv, slot]
+    rounds = ranks // m + 1
+    low_span = m ** (level - 2)
+    lows = cur % low_span
+    upper = copy_index(cur, level, m)
+    new = upper * m**level + b * m ** (level - 1) + edge * low_span + lows
+    return new.astype(np.int64), rounds.astype(np.int64)
+
+
+def all_to_all_tree_hops(topo: CLEXTopology) -> int:
+    """All-to-all flooding (Sec. II-C): each message traverses at most one
+    edge per level; returns the per-message hop bound (= L)."""
+    return topo.L
+
+
+def valiant_intermediate(
+    topo: CLEXTopology,
+    sources: np.ndarray,
+    rng: np.random.Generator,
+    within_level: int | None = None,
+) -> np.ndarray:
+    """Valiant's trick: u.i.r. intermediate destinations.  If ``within_level``
+    is given, the "lightweight" variant of Sec. III-A: redistribute only
+    inside the level-``within_level`` copy of each source (paper suggests
+    1/s - 1 or 1/s - 2), drastically reducing the 2x overhead."""
+    if within_level is None:
+        return rng.integers(0, topo.n, size=sources.shape[0], dtype=np.int64)
+    span = topo.m**within_level
+    lows = rng.integers(0, span, size=sources.shape[0], dtype=np.int64)
+    return (sources // span) * span + lows

@@ -1,0 +1,230 @@
+"""CLEX and torus topologies (Lenzen & Wattenhofer, "CLEX: Yet Another
+Supercomputer Architecture?").
+
+The CLEX graph C(s, l) is defined recursively (paper Def. 2.3):
+
+    C(s, 1)   = K_{n^s}                      (a clique of m := n^s nodes)
+    C(s, l+1) = n^s copies of C(s, l) plus the inter-copy bundles E_{i,l+1}.
+
+We identify each node of C(s, L) (L = 1/s levels, n = m^L nodes) with an
+integer whose base-m digits are the paper's label (v_1, ..., v_L), digit 0
+being the position inside the level-1 clique.  With 0-indexed digit
+positions, the paper's edge set E_{i,l+1} says:  the level-(l+1) bundle of
+node x (m parallel edges) leads to the nodes y with
+
+    y_i = x_i          for i in 0 .. l-2      (low digits preserved)
+    y_{l-1}  free      (the m edges of the bundle)
+    y_l = x_{l-1}      (destination copy index = source digit l-1)
+    y_i = x_i          for i > l              (same enclosing copy)
+
+i.e. *which* sibling copy a node's bundle reaches is determined by its own
+digit at position l-1.  Everything the routing simulator needs is therefore
+pure digit arithmetic; the million-node graphs of the paper's experiments
+are never materialised.  Explicit adjacency construction is provided for
+small instances (tests / visual checks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = [
+    "CLEXTopology",
+    "TorusTopology",
+    "digit",
+    "with_digit",
+    "copy_index",
+]
+
+
+def digit(x, pos: int, m: int):
+    """Base-m digit at position ``pos`` of node id ``x`` (scalar or array)."""
+    return (x // m**pos) % m
+
+
+def with_digit(x, pos: int, m: int, value):
+    """Return node id equal to ``x`` but with digit ``pos`` replaced."""
+    return x + (value - digit(x, pos, m)) * m**pos
+
+
+def copy_index(x, level: int, m: int):
+    """Index of the level-``level`` copy containing ``x`` (digits >= level)."""
+    return x // m**level
+
+
+@dataclasses.dataclass(frozen=True)
+class CLEXTopology:
+    """C(s, L) with clique size m = n^s and L = 1/s levels (n = m**L)."""
+
+    m: int  # clique size n^s
+    L: int  # number of levels 1/s
+
+    def __post_init__(self):
+        if self.m < 2 or self.L < 1:
+            raise ValueError(f"invalid CLEX parameters m={self.m} L={self.L}")
+
+    # ---- basic quantities (paper Sec. II-B) ------------------------------
+    @property
+    def n(self) -> int:
+        return self.m**self.L
+
+    @property
+    def s(self) -> float:
+        return 1.0 / self.L
+
+    @property
+    def degree(self) -> int:
+        """Uniform out-degree of C(s, 1/s):  n^s / s - 1  (paper)."""
+        return self.m * self.L - 1
+
+    @property
+    def fat_link_degree(self) -> int:
+        """Degree when each level bundle is one fat link: n^s + 1/s - 2."""
+        return self.m + self.L - 2
+
+    @property
+    def diameter_bound(self) -> int:
+        """D(C(s, 1/s)) <= 2^{1/s} - 1 (paper)."""
+        return 2**self.L - 1
+
+    def num_directed_bundle_edges(self, level: int) -> int:
+        """Directed edges on ``level`` (2..L): every node has one m-edge bundle
+        inside each of its n / m^level enclosing level-``level`` copies."""
+        if not 2 <= level <= self.L:
+            raise ValueError(f"level must be in 2..{self.L}")
+        return self.n * self.m  # one outgoing bundle of m edges per node
+
+    # ---- physical embedding (hierarchical cubes, paper Sec. II-B/III) ---
+    def side_length(self, level: int, d_min: float = 1.0) -> float:
+        """Edge length of the cube holding one level-``level`` copy,
+        assuming density limited by cooling: (l/d_min)^3 nodes per cube."""
+        return d_min * (self.m**level) ** (1.0 / 3.0)
+
+    def max_link_length(self, level: int, d_min: float = 1.0) -> float:
+        """Maximal physical length of a level-``level`` link:
+        sqrt(3) * n^{l s / 3} / 2 (paper Sec. II-C)."""
+        return math.sqrt(3.0) * self.side_length(level, d_min) / 2.0
+
+    def level_length_ratio(self) -> float:
+        """Per-level growth of link lengths: m^{1/3} (3.2 for m=32, 4 for 64)."""
+        return self.m ** (1.0 / 3.0)
+
+    def propagation_optimum(self, d_min: float = 1.0) -> float:
+        """(1+o(1)) sqrt(3) n^{1/3} / 2 — the physical lower bound any
+        architecture must pay (paper Sec. II-C)."""
+        return math.sqrt(3.0) * (self.n ** (1.0 / 3.0)) * d_min / 2.0
+
+    def all_to_all_propagation(self, d_min: float = 1.0) -> float:
+        """Sum over levels of the max link length: the paper's
+        c_p * sqrt(3)/2 * n^{1/3} * sum_i n^{-is/3} bound."""
+        return sum(self.max_link_length(l, d_min) for l in range(1, self.L + 1))
+
+    # ---- routing helpers (digit arithmetic used by the simulator) -------
+    def bundle_target_copy(self, x, level: int):
+        """Copy of C(s, level-1) reached by x's level-``level`` bundle
+        (digit position level-2 of x)."""
+        return digit(x, level - 2, self.m)
+
+    def gateway_digit_pos(self, level: int) -> int:
+        """Digit position that must equal the destination copy for a node to
+        own level-``level`` edges toward it."""
+        return level - 2
+
+    # ---- explicit construction for small instances ----------------------
+    def build_out_edges(self) -> "np.ndarray":
+        """Directed out-edge count matrix (including self-loops, which the
+        paper explicitly allows) for small n.  Out-degrees are uniformly
+        (m-1) + (L-1)*m = n^s/s - 1, the paper's degree claim."""
+        n, m = self.n, self.m
+        if n > 4096:
+            raise ValueError("explicit adjacency only for small instances")
+        adj = np.zeros((n, n), dtype=np.int32)
+        ids = np.arange(n)
+        # level-1 cliques: same digits >= 1, no self edge
+        same_clique = (ids[:, None] // m) == (ids[None, :] // m)
+        adj += (same_clique & (ids[:, None] != ids[None, :])).astype(np.int32)
+        # level >= 2 bundles: one m-edge bundle per node per level
+        for level in range(2, self.L + 1):
+            for x in range(n):
+                lows = x % m ** max(level - 2, 0)
+                target_copy_digit = digit(x, level - 2, m)
+                base = (
+                    copy_index(x, level, m) * m**level
+                    + target_copy_digit * m ** (level - 1)
+                )
+                for j in range(m):
+                    y = base + j * m ** (level - 2) + lows
+                    adj[x, y] += 1
+        return adj
+
+    def build_adjacency(self) -> "np.ndarray":
+        """Symmetrised boolean adjacency without self-loops (for
+        connectivity / diameter checks)."""
+        counts = self.build_out_edges()
+        adj = (counts + counts.T) > 0
+        np.fill_diagonal(adj, False)
+        return adj
+
+    def build_networkx(self):
+        import networkx as nx
+
+        return nx.from_numpy_array(self.build_adjacency())
+
+
+@dataclasses.dataclass(frozen=True)
+class TorusTopology:
+    """3D torus of k1*k2*k3 nodes — the Blue Gene / Cray XMT baseline."""
+
+    k1: int
+    k2: int
+    k3: int
+
+    @classmethod
+    def cube(cls, k: int) -> "TorusTopology":
+        return cls(k, k, k)
+
+    @property
+    def n(self) -> int:
+        return self.k1 * self.k2 * self.k3
+
+    @property
+    def degree(self) -> int:
+        return 6
+
+    def bisection_edges(self) -> int:
+        """Minimum bisection: 2 k^2 for the symmetric torus (paper Sec. I)."""
+        k = min(self.k1, self.k2, self.k3)
+        pairs = {self.k1: self.k2 * self.k3, self.k2: self.k1 * self.k3, self.k3: self.k1 * self.k2}
+        # cut orthogonal to the dimension with the worst bandwidth/node ratio
+        return 2 * min(pairs[self.k1], pairs[self.k2], pairs[self.k3]) if k else 0
+
+    def all_to_all_avg_hops(self) -> float:
+        """Dimension-ordered flooding: (k1 + k2 + k3)/2 >= 3 n^{1/3}/2."""
+        return (self.k1 + self.k2 + self.k3) / 2.0
+
+    def effective_p2p_bandwidth_fraction(self) -> float:
+        """Upper bound on per-node effective bandwidth under u.i.r. traffic,
+        as a fraction of node bandwidth B: 2 B / (3 n^{1/3}) (paper Sec. III-A).
+        """
+        return 2.0 / (3.0 * self.n ** (1.0 / 3.0))
+
+    def node_xyz(self, ids):
+        x = ids % self.k1
+        y = (ids // self.k1) % self.k2
+        z = ids // (self.k1 * self.k2)
+        return x, y, z
+
+    def hop_distance(self, a, b):
+        ax, ay, az = self.node_xyz(a)
+        bx, by, bz = self.node_xyz(b)
+
+        def ring(d, k):
+            d = np.abs(d)
+            return np.minimum(d, k - d)
+
+        return (
+            ring(ax - bx, self.k1) + ring(ay - by, self.k2) + ring(az - bz, self.k3)
+        )

@@ -1,0 +1,125 @@
+"""Dimension-ordered-routing simulator for the 3D torus baseline.
+
+The paper compares CLEX against the torus *theoretical optimum*
+(bisection-bound effective bandwidth, shortest-path hops) and notes that a
+"real-world routing mechanism will not be able to concurrently propagate
+all messages along shortest paths".  This simulator quantifies that gap:
+synchronous DOR (x then y then z, shortest ring direction) with unit-
+capacity links and FIFO queues, fully vectorised over messages.
+
+Outputs mirror the CLEX simulator: average/max delivery rounds (queueing
+included) and average hops, so `benchmarks` can report measured-vs-bound
+for the baseline too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .topology import TorusTopology
+
+__all__ = ["TorusSimResult", "simulate_torus_dor"]
+
+
+@dataclasses.dataclass
+class TorusSimResult:
+    topo: TorusTopology
+    msgs_per_node: int
+    avg_hops: float
+    avg_rounds: float  # delivery time including queueing
+    max_rounds: int
+    congestion_overhead: float  # avg_rounds / avg_hops (1.0 = no queueing)
+
+    def row(self) -> dict:
+        return {
+            "avg_hops": round(self.avg_hops, 2),
+            "avg_rounds": round(self.avg_rounds, 2),
+            "max_rounds": int(self.max_rounds),
+            "congestion_overhead": round(self.congestion_overhead, 2),
+        }
+
+
+def _ring_step(cur: np.ndarray, dst: np.ndarray, k: int) -> np.ndarray:
+    """Next coordinate along the shorter ring direction (0 if arrived)."""
+    d = (dst - cur) % k
+    step = np.where(d == 0, 0, np.where(d <= k // 2, 1, -1))
+    return step
+
+
+def simulate_torus_dor(
+    topo: TorusTopology, msgs_per_node: int, seed: int = 0, max_rounds: int = 100000
+) -> TorusSimResult:
+    """Synchronous DOR with unit-capacity links: per round, each directed
+    link forwards one message (u.a.r. among contenders); losers wait."""
+    rng = np.random.default_rng(seed)
+    n = topo.n
+    src = np.repeat(np.arange(n, dtype=np.int64), msgs_per_node)
+    dst = src.copy()
+    rng.shuffle(dst)
+
+    ks = (topo.k1, topo.k2, topo.k3)
+    cx, cy, cz = topo.node_xyz(src)
+    dx, dy, dz = topo.node_xyz(dst)
+    cur = [cx.astype(np.int64), cy.astype(np.int64), cz.astype(np.int64)]
+    dest = [dx.astype(np.int64), dy.astype(np.int64), dz.astype(np.int64)]
+
+    nmsg = src.shape[0]
+    hops = np.zeros(nmsg, dtype=np.int64)
+    done_round = np.full(nmsg, -1, dtype=np.int64)
+    arrived = (cur[0] == dest[0]) & (cur[1] == dest[1]) & (cur[2] == dest[2])
+    done_round[arrived] = 0
+
+    for rnd in range(1, max_rounds + 1):
+        active = done_round < 0
+        if not active.any():
+            break
+        idx = np.flatnonzero(active)
+        # DOR: the dimension each active message moves in next
+        dim = np.zeros(idx.shape[0], dtype=np.int64)
+        for d in range(3):
+            not_done_d = cur[d][idx] != dest[d][idx]
+            dim = np.where((dim == d) & ~not_done_d, dim + 1, dim)
+        dim = np.minimum(dim, 2)
+        steps = np.zeros(idx.shape[0], dtype=np.int64)
+        for d in range(3):
+            sel = dim == d
+            steps[sel] = _ring_step(cur[d][idx[sel]], dest[d][idx[sel]], ks[d])
+        # link id: (node, dim, direction); one winner per link per round
+        node = cur[0][idx] + ks[0] * (cur[1][idx] + ks[1] * cur[2][idx])
+        link = ((node * 3 + dim) * 2 + (steps > 0)).astype(np.int64)
+        order = rng.permutation(idx.shape[0])
+        sorted_link = link[order]
+        sort2 = np.argsort(sorted_link, kind="stable")
+        fin = order[sort2]
+        first = np.ones(idx.shape[0], dtype=bool)
+        first[1:] = link[fin][1:] != link[fin][:-1]
+        winners_local = fin[first]
+        win = idx[winners_local]
+        d_arr = dim[winners_local]
+        s_arr = steps[winners_local]
+        for d in range(3):
+            sel = d_arr == d
+            w = win[sel]
+            cur[d][w] = (cur[d][w] + s_arr[sel]) % ks[d]
+        hops[win] += 1
+        arrived_now = (
+            (cur[0][win] == dest[0][win])
+            & (cur[1][win] == dest[1][win])
+            & (cur[2][win] == dest[2][win])
+        )
+        done_round[win[arrived_now]] = rnd
+    else:
+        raise RuntimeError("torus DOR did not converge")
+
+    avg_hops = float(hops.mean())
+    avg_rounds = float(done_round.mean())
+    return TorusSimResult(
+        topo=topo,
+        msgs_per_node=msgs_per_node,
+        avg_hops=avg_hops,
+        avg_rounds=avg_rounds,
+        max_rounds=int(done_round.max()),
+        congestion_overhead=avg_rounds / max(avg_hops, 1e-9),
+    )

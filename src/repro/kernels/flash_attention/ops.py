@@ -1,0 +1,36 @@
+"""Jitted public wrapper for the flash attention kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,  # [B, S, H, D]
+    k: jax.Array,  # [B, Skv, KV, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    assert h % kv == 0
+    scale = d**-0.5
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, k.shape[1], d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, v.shape[1], d)
+    out = flash_attention_bhsd(
+        qr, kr, vr, kv_map=h // kv, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,27 @@
+"""Jitted wrappers: grouped GEMM + the full expert SwiGLU FFN."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import grouped_matmul
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gmm(x, w, interpret: bool = False):
+    return grouped_matmul(x, w, interpret=interpret)
+
+
+def expert_ffn(params, buckets, interpret: bool = False):
+    """SwiGLU per expert over capacity buckets — Pallas grouped GEMMs."""
+    compute = buckets.dtype
+    wg = params["w_gate"].astype(compute)
+    wu = params["w_up"].astype(compute)
+    wd = params["w_down"].astype(compute)
+    h = jax.nn.silu(grouped_matmul(buckets, wg, interpret=interpret)) * grouped_matmul(
+        buckets, wu, interpret=interpret
+    )
+    return grouped_matmul(h, wd, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the grouped expert GEMM."""
+
+import jax.numpy as jnp
+
+
+def reference_grouped_matmul(x, w):
+    """[E, C, D] x [E, D, F] -> [E, C, F] in fp32 accumulation."""
+    return jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def reference_expert_ffn(params, buckets):
+    compute = buckets.dtype
+    wg = params["w_gate"].astype(compute)
+    wu = params["w_up"].astype(compute)
+    wd = params["w_down"].astype(compute)
+    import jax
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buckets, wg)) * jnp.einsum(
+        "ecd,edf->ecf", buckets, wu
+    )
+    return jnp.einsum("ecf,efd->ecd", h, wd)

@@ -1,0 +1,14 @@
+"""Jitted wrapper for the SSD chunked-scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a, b, c, *, chunk: int = 256, interpret: bool = False):
+    return ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=interpret)

@@ -1,0 +1,37 @@
+"""Sequential-recurrence oracle for the SSD kernel (and for
+``models.ssm.ssd_chunked``): the literal per-timestep state update
+
+    h_t = exp(dt_t * a) h_{t-1} + dt_t B_t x_t^T ;   y_t = C_t^T h_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_ssd(x, dt, a, b, c, h0=None):
+    """x [B,S,H,P]; dt [B,S,H]; a [H]; b/c [B,S,N] -> (y [B,S,H,P], h [B,H,P,N])."""
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(hstate, t):
+        g = jnp.exp(dtf[:, t] * af[None, :])  # [B,H]
+        u = xf[:, t] * dtf[:, t][..., None]  # [B,H,P]
+        hstate = hstate * g[:, :, None, None] + jnp.einsum("bhp,bn->bhpn", u, bf[:, t])
+        y = jnp.einsum("bhpn,bn->bhp", hstate, cf[:, t])
+        return hstate, y
+
+    init = (
+        h0.astype(jnp.float32)
+        if h0 is not None
+        else jnp.zeros((bs, h, p, n), jnp.float32)
+    )
+    h_final, ys = jax.lax.scan(step, init, jnp.arange(s))
+    y = ys.transpose(1, 0, 2, 3)  # [B,S,H,P]
+    return y.astype(x.dtype), h_final

@@ -1,0 +1,48 @@
+"""Production meshes.
+
+The mesh is the CLEX hierarchy seen by the framework: ``model`` is the
+innermost (fastest, level-1) axis, ``data`` the intra-pod DP axis, ``pod``
+the scarce top level.  ``make_production_mesh`` builds the assignment's
+16x16 single-pod (256 chips) and 2x16x16 multi-pod (512 chips) meshes.
+
+Functions, not module-level constants: importing this module never touches
+jax device state.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "make_elastic_mesh", "dp_axes", "mesh_axis_sizes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_elastic_mesh(n_devices: int | None = None, model_parallel: int | None = None):
+    """Elastic re-mesh after node loss: keep the model axis fixed (sharding
+    of parameters must still fit) and shrink the data axis to whatever
+    device count survives.  n_devices must be divisible by the model axis."""
+    devices = jax.devices()
+    n = n_devices or len(devices)
+    mp = model_parallel or min(16, n)
+    while n % mp:
+        mp //= 2
+    dp = n // mp
+    return jax.make_mesh(
+        (dp, mp), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        devices=devices[:n],
+    )
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

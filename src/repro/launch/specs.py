@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation: parameters/optimizer state come from
+``jax.eval_shape``, inputs are ShapeDtypeStructs, caches abstract too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import Model
+
+__all__ = ["input_specs", "abstract_params", "abstract_caches", "cell_is_applicable"]
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k requires a sub-quadratic path (assignment rule)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return False, "skip: pure full attention at 524k context (assignment rule)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for the step being lowered (train/prefill: a batch dict;
+    decode: token/pos — caches come from ``abstract_caches``)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if shape.kind in ("train", "prefill"):
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if shape.kind == "train":
+            batch["targets"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.enc_dec:
+            batch["encoder_frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend.d_frontend), bf16)
+        elif cfg.frontend is not None and cfg.frontend.n_tokens:
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, min(cfg.frontend.n_tokens, s // 2), cfg.frontend.d_frontend), bf16
+            )
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((b,), i32),
+    }
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_caches(model: Model, shape: ShapeConfig):
+    cfg = model.cfg
+    mem_len = shape.seq_len if cfg.enc_dec else 0
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, mem_len=mem_len)
+    )

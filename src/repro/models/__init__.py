@@ -1,0 +1,6 @@
+"""Model substrate: layers, attention (GQA/MLA/SWA), MoE, Mamba-2 SSD,
+composable transformer stacks, and the top-level Model."""
+
+from .model import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,120 @@
+"""Fault tolerance at 1000-node scale.
+
+Pieces that can be built and tested without real hardware:
+
+* ``run_with_restarts`` — the launcher's watchdog loop: run the training
+  function; on (injected or real) failure, restore the latest checkpoint
+  and resume with exact data skip-ahead.  The data pipeline is stateless
+  (batch = f(seed, step)), so resume is bit-exact.
+* ``StragglerMonitor`` — per-step wall-time ring buffer; flags steps slower
+  than ``threshold``x the running median (the drain/replace signal).  The
+  *network-level* straggler mitigation is the CLEX routing itself
+  (randomized relay — reproduced in core.simulator).
+* ``ElasticPlan`` — given surviving device count, choose the new mesh and
+  microbatching so the global batch (and therefore the training dynamics)
+  is preserved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from ..checkpoint.checkpointing import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["run_with_restarts", "StragglerMonitor", "ElasticPlan", "plan_remesh"]
+
+
+def run_with_restarts(
+    step_fn: Callable,  # (state, step) -> state ; may raise
+    init_state,
+    n_steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 10,
+    max_restarts: int = 10,
+    on_restore: Callable | None = None,
+):
+    """Watchdog loop with checkpoint/restart.  Returns (state, restarts)."""
+    restarts = 0
+    state = init_state
+    step = 0
+    if latest_step(ckpt_dir) is not None:
+        state, step = restore_checkpoint(ckpt_dir, init_state)
+        step += 1
+    while step < n_steps:
+        try:
+            state = step_fn(state, step)
+            if step % ckpt_every == 0 or step == n_steps - 1:
+                save_checkpoint(ckpt_dir, step, state)
+            step += 1
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            last = latest_step(ckpt_dir)
+            if last is None:
+                state, step = init_state, 0
+            else:
+                state, step = restore_checkpoint(ckpt_dir, init_state)
+                step += 1
+            if on_restore is not None:
+                on_restore(restarts, step)
+    return state, restarts
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    window: int = 64
+    threshold: float = 2.0
+
+    def __post_init__(self):
+        self._times: list[float] = []
+        self._t0: float | None = None
+
+    def step_start(self):
+        self._t0 = time.monotonic()
+
+    def step_end(self) -> bool:
+        """Record; return True if this step was a straggler."""
+        dt = time.monotonic() - self._t0
+        self._times.append(dt)
+        self._times = self._times[-self.window :]
+        med = float(np.median(self._times))
+        return len(self._times) >= 8 and dt > self.threshold * med
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self._times)) if self._times else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data_parallel: int
+    model_parallel: int
+    microbatches: int
+    note: str
+
+
+def plan_remesh(
+    surviving_devices: int, model_parallel: int, global_batch: int, prev_dp: int
+) -> ElasticPlan:
+    """Shrink the data axis to the surviving devices, keep the model axis
+    (parameter sharding must still fit), and raise grad-accumulation so the
+    global batch — and training dynamics — are unchanged."""
+    if surviving_devices < model_parallel:
+        raise ValueError("fewer devices than the model-parallel degree; cannot re-mesh")
+    dp = surviving_devices // model_parallel
+    # largest power-of-two dp that divides the global batch
+    while dp > 1 and (global_batch % dp or dp & (dp - 1)):
+        dp -= 1
+    micro = max(1, prev_dp // dp)
+    return ElasticPlan(
+        data_parallel=dp,
+        model_parallel=model_parallel,
+        microbatches=micro,
+        note=f"{surviving_devices} devices -> mesh ({dp}, {model_parallel}), "
+        f"{micro} microbatches preserve global batch {global_batch}",
+    )

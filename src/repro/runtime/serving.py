@@ -1,0 +1,59 @@
+"""Batched serving: prefill + autoregressive decode with greedy/temperature
+sampling, ragged prompt handling via left-padding, and jitted step reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Model
+
+__all__ = ["ServingEngine"]
+
+
+@dataclasses.dataclass
+class ServingEngine:
+    model: Model
+    params: object
+    max_len: int = 512
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate(
+        self,
+        prompts: np.ndarray,  # [B, S] int32 (left-padded with pad_id)
+        max_new_tokens: int,
+        pad_id: int = 0,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """Returns generated tokens [B, max_new_tokens]."""
+        b, s = prompts.shape
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if self.model.cfg.enc_dec:
+            raise NotImplementedError("use generate_enc_dec for encoder-decoder models")
+        logits, caches = self._prefill(self.params, batch)
+        caches = self.model.prepare_decode_caches(caches, capacity=self.max_len)
+        key = jax.random.PRNGKey(seed)
+        pos = jnp.full((b,), s, jnp.int32)
+        out = []
+        tok = self._sample(logits[:, 0], temperature, key)
+        out.append(tok)
+        for i in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(self.params, caches, tok[:, None], pos + i)
+            tok = self._sample(logits[:, 0], temperature, sub)
+            out.append(tok)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)

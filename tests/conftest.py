@@ -1,0 +1,11 @@
+"""Test-session configuration.
+
+8 virtual CPU devices for the whole pytest process (collective/mesh tests
+need a multi-device mesh; model smoke tests are device-count agnostic).
+This must run before any jax import — pytest loads conftest first.
+The production 512-device setting lives ONLY in repro.launch.dryrun.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")

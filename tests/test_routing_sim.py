@@ -1,0 +1,174 @@
+"""Routing + simulator invariants (paper Sec. II-D and III)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CLEXTopology,
+    bundle_hop,
+    copy_index,
+    copy_schedule,
+    derive_comparison,
+    digit,
+    log_star,
+    sample_gateways,
+    simulate_point_to_point,
+    uniform_permutation_traffic,
+    unrolled_schedule,
+    valiant_intermediate,
+)
+
+
+def test_log_star():
+    assert log_star(2) == 1
+    assert log_star(4) == 2
+    assert log_star(16) == 3
+    assert log_star(65536) == 4
+    assert log_star(2**65536) == 5
+
+
+def test_copy_schedule_growth():
+    ks = copy_schedule(32)
+    assert ks[0] == 0  # direct-send phase
+    assert ks[1] == 1
+    assert all(k >= 1 for k in ks[1:])
+    assert max(ks) >= 2  # the cap sqrt(log2 m) allows 2 copies eventually
+
+
+def test_unrolled_schedule_counts():
+    """seq(4) has 8 LB calls and 4/2/1 hops on levels 2/3/4 — this is what
+    fixes the paper's exact per-level avg hop counts (Table I: 4, 2, 1)."""
+    seq = unrolled_schedule(4)
+    assert len(seq) == 15
+    assert seq.count(0) == 8
+    assert seq.count(2) == 4
+    assert seq.count(3) == 2
+    assert seq.count(4) == 1
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_gateway_property(seed):
+    """Gateways lie in the source's level-(l-1) copy and own level-l edges
+    toward the destination copy."""
+    topo = CLEXTopology(m=8, L=3)
+    rng = np.random.default_rng(seed)
+    cur = rng.integers(0, topo.n, size=500, dtype=np.int64)
+    dest = rng.integers(0, topo.n, size=500, dtype=np.int64)
+    level = 3
+    # destination must be inside the same level-l copy for A(l)
+    dest = (copy_index(cur, level, topo.m)) * topo.m**level + dest % topo.m**level
+    gw = sample_gateways(topo, cur, dest, level, rng)
+    assert (copy_index(gw, level - 1, topo.m) == copy_index(cur, level - 1, topo.m)).all()
+    assert (digit(gw, level - 2, topo.m) == digit(dest, level - 1, topo.m)).all()
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_bundle_hop_lands_in_destination_copy(seed):
+    topo = CLEXTopology(m=8, L=3)
+    rng = np.random.default_rng(seed)
+    level = 2
+    n = topo.n
+    cur = rng.integers(0, n, size=400, dtype=np.int64)
+    dest = rng.integers(0, n, size=400, dtype=np.int64)
+    dest = copy_index(cur, level, topo.m) * topo.m**level + dest % topo.m**level
+    # route via gateway first so the hop precondition holds
+    gw = sample_gateways(topo, cur, dest, level, rng)
+    new, rounds = bundle_hop(topo, gw, dest, level, rng)
+    # lands in the destination's level-(l-1) copy
+    assert (copy_index(new, level - 1, topo.m) == copy_index(dest, level - 1, topo.m)).all()
+    # low digits below l-2 are preserved (the bundle's parallel edges)
+    span = topo.m ** (level - 2)
+    assert (new % span == gw % span).all()
+    assert (rounds >= 1).all()
+
+
+def test_bundle_hop_balances_edges():
+    """Surplus edges are chosen u.a.r.; ranks are balanced: with q messages at
+    one gateway, edge loads differ by at most 1."""
+    topo = CLEXTopology(m=8, L=2)
+    rng = np.random.default_rng(0)
+    q = 21
+    cur = np.zeros(q, dtype=np.int64)  # all at gateway 0, digit0 = 0
+    dest = np.zeros(q, dtype=np.int64)  # destination copy 0
+    new, rounds = bundle_hop(topo, cur, dest, 2, rng)
+    edges = digit(new, 0, topo.m)
+    counts = np.bincount(edges, minlength=8)
+    assert counts.max() - counts.min() <= 1
+    assert rounds.max() == int(np.ceil(q / 8))
+
+
+def test_uniform_permutation_traffic_is_balanced():
+    topo = CLEXTopology(m=4, L=2)
+    rng = np.random.default_rng(0)
+    src, dst = uniform_permutation_traffic(topo, 5, rng)
+    assert (np.bincount(src, minlength=topo.n) == 5).all()
+    assert (np.bincount(dst, minlength=topo.n) == 5).all()
+
+
+def test_valiant_intermediate_within_level():
+    topo = CLEXTopology(m=4, L=3)
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, topo.n, size=1000, dtype=np.int64)
+    mid = valiant_intermediate(topo, src, rng, within_level=2)
+    assert (copy_index(mid, 2, 4) == copy_index(src, 2, 4)).all()
+
+
+@pytest.mark.parametrize("mode", ["dense", "light"])
+@pytest.mark.parametrize("m,L", [(8, 2), (8, 3), (4, 4)])
+def test_simulation_delivers_and_hop_counts_exact(mode, m, L):
+    """All messages delivered; levels >= 2 see exactly 2^{L-l} hops per
+    message (the paper's Table I/III structure)."""
+    topo = CLEXTopology(m, L)
+    res = simulate_point_to_point(topo, msgs_per_node=3, mode=mode, seed=0)
+    for level in range(2, L + 1):
+        assert res.levels[level].avg_hops == pytest.approx(2.0 ** (L - level))
+        assert res.levels[level].avg_rounds >= 2.0 ** (L - level)
+    # level-1: every message participates in 2^{L-1} LB calls, most need
+    # exactly one hop each; relays may add more but never less than ~1/call
+    lb_calls = 2.0 ** (L - 1)
+    assert res.levels[1].avg_hops >= 0.9 * lb_calls
+    assert res.levels[1].avg_hops <= 2.5 * lb_calls
+
+
+def test_simulation_is_seed_reproducible():
+    topo = CLEXTopology(8, 2)
+    r1 = simulate_point_to_point(topo, 4, mode="dense", seed=7)
+    r2 = simulate_point_to_point(topo, 4, mode="dense", seed=7)
+    assert r1.table() == r2.table()
+
+
+def test_dense_vs_light_accounting():
+    """Dense mode's request/ack costs extra rounds; light mode's copies cost
+    extra hops. Check the qualitative relation on one topology."""
+    topo = CLEXTopology(16, 2)
+    dense = simulate_point_to_point(topo, 14, mode="dense", seed=3)
+    light = simulate_point_to_point(topo, 2, mode="light", seed=3)
+    # light traffic needs at most as many max rounds on level 1
+    assert light.levels[1].max_rounds <= dense.levels[1].max_rounds
+
+
+def test_derived_comparison_formulas():
+    topo = CLEXTopology(8, 3)
+    res = simulate_point_to_point(topo, 7, mode="dense", seed=0)
+    d = derive_comparison(res)
+    k = topo.n ** (1 / 3)
+    assert d.torus_avg_hops == pytest.approx(1.5 * k)
+    assert d.bandwidth_gain == pytest.approx(
+        (1.0 / res.sum_avg_hops) / (2.0 / (3.0 * k))
+    )
+    assert d.propagation_competitive_ratio >= 1.0
+
+
+def test_self_messages_are_free():
+    """Messages whose interim destination equals their position use the
+    self-loop: 0 hops, 0 rounds contribution."""
+    topo = CLEXTopology(8, 2)
+    src = np.arange(topo.n, dtype=np.int64)
+    res = simulate_point_to_point(topo, 1, mode="dense", seed=0, src=src, dst=src.copy())
+    # destination == source: level-2 still crosses (no locality shortcut in
+    # the paper's algorithm: every message hops every level exactly once)
+    assert res.levels[2].avg_hops == 1.0

@@ -1,0 +1,103 @@
+"""Structural properties of the CLEX graph (paper Sec. II-B)."""
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CLEXTopology, TorusTopology, copy_index, digit, with_digit
+
+
+@pytest.mark.parametrize("m,L", [(3, 2), (4, 2), (3, 3), (4, 3), (2, 4)])
+def test_uniform_degree(m, L):
+    """C(s, 1/s) has uniform directed out-degree n^s/s - 1 (paper counts the
+    clique's m-1 edges plus one m-edge bundle per level >= 2, self-loops
+    included — 'nodes may send messages to themselves')."""
+    topo = CLEXTopology(m, L)
+    out = topo.build_out_edges()
+    degrees = out.sum(axis=1)
+    assert degrees.min() == degrees.max()
+    assert degrees[0] == topo.degree == m * L - 1
+
+
+@pytest.mark.parametrize("m,L", [(3, 2), (4, 2), (3, 3), (2, 4)])
+def test_diameter_bound(m, L):
+    """D(C(s, 1/s)) <= 2^{1/s} - 1."""
+    topo = CLEXTopology(m, L)
+    g = topo.build_networkx()
+    assert nx.is_connected(g)
+    assert nx.diameter(g) <= topo.diameter_bound
+
+
+@pytest.mark.parametrize("m,L", [(4, 2), (3, 3)])
+def test_every_copy_pair_connected(m, L):
+    """Each copy of C(s,l) is connected to every other copy by |V(C(s,l))|
+    directed bundle edges (paper: 'connects each of its subgraphs ... by
+    |V(C(s,l))| many edges to any other')."""
+    topo = CLEXTopology(m, L)
+    n = topo.n
+    top_span = m ** (L - 1)
+    ids = np.arange(n)
+    # level-L bundles: node x -> copy digit(x, L-2)
+    for i in range(m):
+        members = ids[copy_index(ids, L - 1, m) == i]
+        targets = digit(members, L - 2, m)
+        counts = np.bincount(targets, minlength=m)
+        # every node has one bundle; nodes are spread evenly over target copies
+        assert counts.sum() == top_span
+        assert (counts == top_span // m).all()
+
+
+def test_clique_level():
+    topo = CLEXTopology(4, 3)
+    adj = topo.build_adjacency()
+    for c in range(topo.n // 4):
+        block = adj[c * 4 : (c + 1) * 4, c * 4 : (c + 1) * 4]
+        assert block.sum() == 4 * 3  # complete K_4 without loops
+
+
+def test_link_lengths_graded():
+    topo = CLEXTopology(32, 4)
+    lengths = [topo.max_link_length(l) for l in range(1, 5)]
+    ratios = [lengths[i + 1] / lengths[i] for i in range(3)]
+    assert all(abs(r - 32 ** (1 / 3)) < 1e-9 for r in ratios)
+    # all-to-all propagation is (1+o(1)) of the physical optimum
+    assert topo.all_to_all_propagation() / topo.propagation_optimum() < 1.5
+
+
+def test_torus_bounds():
+    torus = TorusTopology.cube(64)
+    assert torus.n == 64**3
+    assert torus.bisection_edges() == 2 * 64**2
+    assert torus.all_to_all_avg_hops() == 96.0
+    # < 1.1% of total bandwidth for ~1M processors (paper Sec. I)
+    mtorus = TorusTopology.cube(101)
+    assert mtorus.effective_p2p_bandwidth_fraction() < 0.011
+
+
+def test_torus_hop_distance():
+    torus = TorusTopology.cube(8)
+    a = np.array([0])
+    b = np.array([7])  # (7,0,0): ring distance 1
+    assert torus.hop_distance(a, b)[0] == 1
+
+
+@given(
+    m=st.integers(2, 8),
+    L=st.integers(1, 5),
+    pos=st.integers(0, 4),
+    value=st.integers(0, 7),
+    x=st.integers(0, 10**6),
+)
+@settings(max_examples=200, deadline=None)
+def test_digit_roundtrip(m, L, pos, value, x):
+    topo = CLEXTopology(m, L)
+    x = x % topo.n
+    pos = pos % L
+    value = value % m
+    y = with_digit(x, pos, m, value)
+    assert digit(y, pos, m) == value
+    for other in range(L):
+        if other != pos:
+            assert digit(y, other, m) == digit(x, other, m)
