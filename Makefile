@@ -1,0 +1,13 @@
+PYTEST ?= python -m pytest
+
+.PHONY: verify test deps
+
+# Tier-1 gate: the full seed suite on the pinned JAX (see docs/COMPAT.md).
+verify:
+	PYTHONPATH=src $(PYTEST) -x -q
+
+test:
+	PYTHONPATH=src $(PYTEST) -q
+
+deps:
+	pip install -r requirements-dev.txt

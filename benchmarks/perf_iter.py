@@ -60,6 +60,7 @@ def run_variant(arch: str, shape_name: str, mesh_name: str, variant: str) -> dic
     from benchmarks.hlo_analysis import analyze_hlo
     from repro.configs.base import SHAPES, ParallelConfig, get_config
     from repro.launch.dryrun import HW, _model_flops
+    from repro.launch.jax_compat import use_mesh
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import abstract_caches, abstract_params, input_specs
     from repro.models import build_model
@@ -96,7 +97,7 @@ def run_variant(arch: str, shape_name: str, mesh_name: str, variant: str) -> dic
     fsdp = spec.get("fsdp", True)
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params_abs = abstract_params(model)
         axes = model.param_axes()
         batch = input_specs(cfg, shape)
@@ -127,11 +128,8 @@ def run_variant(arch: str, shape_name: str, mesh_name: str, variant: str) -> dic
                     mb = 4
                 if cfg.d_model >= 4096:
                     mb = 8
-            step = make_train_step(
-                model, AdamWConfig(), pcfg,
-                mesh=mesh if pcfg.hierarchical_grad_sync else None,
-                microbatches=mb,
-            )
+            step = make_train_step(model, AdamWConfig(), pcfg, mesh=mesh,
+                                   microbatches=mb)
             compiled = jax.jit(
                 step,
                 in_shardings=(params_sh, opt_sh, batch_sh),

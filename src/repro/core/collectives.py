@@ -18,7 +18,8 @@ routing discipline maps onto collective schedules:
   more than one mesh axis.
 
 All functions are *manual-collective* primitives: call them inside
-``jax.shard_map`` regions whose ``axis_names`` include the axes used.
+``shard_map`` regions (``launch.jax_compat.shard_map`` — version-portable)
+whose ``axis_names`` include the axes used.
 """
 
 from __future__ import annotations
@@ -40,7 +41,9 @@ __all__ = [
 
 
 def _axis_size(name: str) -> int:
-    return jax.lax.axis_size(name)
+    from ..launch.jax_compat import axis_size
+
+    return axis_size(name)
 
 
 def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:

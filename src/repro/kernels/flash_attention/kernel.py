@@ -100,6 +100,8 @@ def flash_attention_bhsd(
 ) -> jax.Array:
     import jax.experimental.pallas.tpu as pltpu
 
+    from ...launch.jax_compat import tpu_compiler_params
+
     bh, s, d = q.shape
     skv = k.shape[1]
     block_q = min(block_q, s)
@@ -127,7 +129,7 @@ def flash_attention_bhsd(
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -50,6 +50,8 @@ def grouped_matmul(
 ) -> jax.Array:
     import jax.experimental.pallas.tpu as pltpu
 
+    from ...launch.jax_compat import tpu_compiler_params
+
     e, c, d = x.shape
     f = w.shape[2]
     block_c = min(block_c, c)
@@ -69,7 +71,7 @@ def grouped_matmul(
         out_specs=pl.BlockSpec((1, block_c, block_f), lambda e, i, j, k: (e, i, j)),
         out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

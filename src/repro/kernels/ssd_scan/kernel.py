@@ -80,6 +80,8 @@ def ssd_scan(
 ):
     import jax.experimental.pallas.tpu as pltpu
 
+    from ...launch.jax_compat import tpu_compiler_params
+
     bs, s, h, p = x.shape
     n = b.shape[-1]
     chunk = min(chunk, s)
@@ -106,7 +108,7 @@ def ssd_scan(
             jax.ShapeDtypeStruct((bs, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

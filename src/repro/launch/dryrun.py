@@ -43,6 +43,7 @@ from ..models import build_model
 from ..optim.adamw import AdamWConfig, adamw_init
 from ..runtime import sharding as shd
 from ..runtime.trainer import make_train_step
+from .jax_compat import cost_analysis_dict, use_mesh
 from .mesh import make_production_mesh
 from .specs import abstract_caches, abstract_params, cell_is_applicable, input_specs
 
@@ -97,7 +98,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False) -
     model = build_model(cfg)
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             params_abs = abstract_params(model)
             axes = model.param_axes()
             batch = input_specs(cfg, shape)
@@ -119,8 +120,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False) -
                     # tokens/shard on the 512-chip mesh; on the single pod the
                     # same setting regresses (GSPMD reshard fixpoint) — keep 1
                     microbatches = max(microbatches, 8)
-                step = make_train_step(model, AdamWConfig(), ParallelConfig(), mesh=None,
-                                       microbatches=microbatches)
+                # auto (GSPMD) grad sync: the mesh is threaded for the
+                # model's sharding constraints only — hierarchical sync would
+                # change the measured program vs the seed baseline
+                step = make_train_step(
+                    model, AdamWConfig(), ParallelConfig(hierarchical_grad_sync=False),
+                    mesh=mesh, microbatches=microbatches,
+                )
                 lowered = jax.jit(
                     step,
                     in_shardings=(params_sh, opt_sh, batch_sh),
@@ -148,7 +154,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, force: bool = False) -
             t_compile = time.time() - t0 - t_lower
 
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = cost_analysis_dict(compiled)
             hlo = analyze_hlo(compiled.as_text(), pod_size=256)
 
         per_device_bytes = (

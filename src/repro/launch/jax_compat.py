@@ -1,0 +1,289 @@
+"""Version-portable mesh/sharding layer — the repo's single pinned-JAX seam.
+
+The environment pins JAX 0.4.37 while the sharding APIs the codebase was
+written against (``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``,
+``jax.set_mesh``, top-level ``jax.shard_map``) only exist on JAX >= 0.5.
+Every version-sensitive construct lives here so future API drift fails in
+exactly one module (guarded by tests/test_jax_compat.py):
+
+* ``make_mesh``          — ``jax.make_mesh`` with the explicit ``axis_types``
+                           argument on new JAX, without it on 0.4.x.
+* ``shard_map``          — top-level ``jax.shard_map`` (``axis_names`` /
+                           ``check_vma``) vs ``jax.experimental.shard_map``
+                           (``check_rep`` / ``auto``).  On 0.4.x the region is
+                           always *full manual* over every mesh axis: partial
+                           auto with partitioned in_specs miscompiles there
+                           (XLA spmd_partitioner ``IsManualSubgroup`` abort).
+* ``MeshContext``        — explicit mesh handle threaded through model and
+                           runtime call signatures, replacing the implicit
+                           ``jax.sharding.get_abstract_mesh()`` pattern.
+* ``use_mesh``/``active_mesh`` — repo-owned ambient mesh for launcher-level
+                           code (dry-run, training loop, tests) that lowers
+                           many entry points under one mesh.
+* ``cost_analysis_dict`` — ``Compiled.cost_analysis()`` returns a list of
+                           dicts on 0.4.x, a dict on newer JAX.
+
+Collective code never needs this module: ``jax.lax`` collectives are stable
+across the supported range.  Only mesh *construction*, *activation* and
+*manual-region entry* go through here.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "JAX_VERSION",
+    "HAS_AXIS_TYPES",
+    "HAS_TOP_LEVEL_SHARD_MAP",
+    "MeshContext",
+    "NO_MESH",
+    "axis_size",
+    "make_mesh",
+    "shard_map",
+    "use_mesh",
+    "active_mesh",
+    "resolve_mesh",
+    "cost_analysis_dict",
+]
+
+
+def _version_tuple(v: str) -> tuple[int, ...]:
+    parts = []
+    for p in v.split(".")[:3]:
+        digits = "".join(ch for ch in p if ch.isdigit())
+        parts.append(int(digits) if digits else 0)
+    return tuple(parts)
+
+
+JAX_VERSION: tuple[int, ...] = _version_tuple(jax.__version__)
+HAS_AXIS_TYPES: bool = hasattr(jax.sharding, "AxisType")
+HAS_TOP_LEVEL_SHARD_MAP: bool = hasattr(jax, "shard_map")
+
+
+# --------------------------------------------------------------------------
+# mesh construction
+# --------------------------------------------------------------------------
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None) -> Mesh:
+    """CLEX hierarchy mesh with auto (GSPMD-visible) axis semantics on every
+    JAX in the supported range."""
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPES:
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# explicit mesh handle
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """The mesh as model/runtime code sees it: axis bookkeeping plus the one
+    sharding op models emit (``constrain``).  Hashable and static, so it can
+    be closed over by jitted functions and scan bodies."""
+
+    mesh: Mesh
+
+    @classmethod
+    def from_any(cls, mesh) -> "MeshContext | None":
+        if mesh is None:
+            return None
+        if isinstance(mesh, MeshContext):
+            return mesh
+        return cls(mesh)
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    def axis_sizes(self) -> dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def axis_size(self, name: str, default: int = 1) -> int:
+        return self.axis_sizes().get(name, default)
+
+    def dp_axes(self) -> tuple[str, ...]:
+        """Data-parallel axes, outermost first (the CLEX top levels)."""
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    def dp_size(self) -> int:
+        out = 1
+        for a in self.dp_axes():
+            out *= self.axis_size(a)
+        return out
+
+    def model_size(self) -> int:
+        return self.axis_size("model")
+
+    def sharding(self, spec: PartitionSpec) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x: jax.Array, spec: PartitionSpec) -> jax.Array:
+        """``with_sharding_constraint`` bound to this mesh — works with or
+        without any ambient mesh context on every supported JAX."""
+        return jax.lax.with_sharding_constraint(x, self.sharding(spec))
+
+
+class _NoMesh:
+    """Sentinel: run mesh-free even if an ambient mesh is active (used inside
+    manual shard_map regions, where auto constraints are illegal)."""
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return "NO_MESH"
+
+
+NO_MESH = _NoMesh()
+
+
+# --------------------------------------------------------------------------
+# repo-owned ambient mesh
+# --------------------------------------------------------------------------
+
+_AMBIENT = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_AMBIENT, "stack"):
+        _AMBIENT.stack = []
+    return _AMBIENT.stack
+
+
+def active_mesh() -> MeshContext | None:
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate ``mesh`` (Mesh, MeshContext, or None for a no-op) for model
+    code that was not handed an explicit mesh, and enter the native JAX mesh
+    context so spec-based APIs work on both families:
+
+    * new JAX: ``jax.sharding.use_mesh`` / ``jax.set_mesh`` (abstract mesh);
+    * 0.4.x:   the legacy ``Mesh`` context manager (resource env).
+    """
+    ctx = MeshContext.from_any(mesh)
+    if ctx is None:
+        yield None
+        return
+    native = None
+    if hasattr(jax.sharding, "use_mesh"):
+        native = jax.sharding.use_mesh(ctx.mesh)
+    elif hasattr(jax, "set_mesh"):
+        native = jax.set_mesh(ctx.mesh)
+    else:
+        native = ctx.mesh  # legacy Mesh context manager
+    _stack().append(ctx)
+    try:
+        with native:
+            yield ctx
+    finally:
+        _stack().pop()
+
+
+def resolve_mesh(mesh) -> MeshContext | None:
+    """Normalise a mesh argument: explicit Mesh/MeshContext wins, ``None``
+    falls back to the ambient ``use_mesh`` context, ``NO_MESH`` forces
+    mesh-free execution."""
+    if isinstance(mesh, _NoMesh):
+        return None
+    if mesh is None:
+        return active_mesh()
+    return MeshContext.from_any(mesh)
+
+
+@contextlib.contextmanager
+def _suppress_ambient():
+    stack = _stack()
+    saved, stack[:] = stack[:], []
+    try:
+        yield
+    finally:
+        stack[:] = saved
+
+
+# --------------------------------------------------------------------------
+# manual-region entry
+# --------------------------------------------------------------------------
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check: bool = False):
+    """Portable ``shard_map``.
+
+    ``axis_names`` is the set of manually-mapped axes (new-JAX semantics).
+    On 0.4.x the body always runs full-manual over every mesh axis, because
+    the partial-auto path (``auto=``) hard-crashes XLA 0.4.x with partitioned
+    in_specs.  Semantics are preserved (the body only names its own axes),
+    but axes outside ``axis_names`` lose GSPMD partitioning inside the
+    region: inputs whose spec does not mention such an axis are gathered and
+    their compute replicated across it.  Callers whose in_specs replicate
+    model-sharded operands (e.g. the hierarchical trainer with model > 1)
+    pay that gather on 0.4.x — acceptable for the pinned CPU test meshes,
+    a real cost on TP hardware; prefer axis-complete specs there.  The body
+    is traced with the repo-ambient mesh suppressed: inside a manual region,
+    models must not emit auto sharding constraints.
+    """
+    ctx = MeshContext.from_any(mesh)
+    if ctx is None:
+        raise ValueError("shard_map requires an explicit mesh")
+
+    def body(*args):
+        with _suppress_ambient():
+            return f(*args)
+
+    if HAS_TOP_LEVEL_SHARD_MAP:
+        kwargs = dict(mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(body, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        body, mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check
+    )
+
+
+def axis_size(name) -> int:
+    """Static size of a named mesh axis inside a manual region.
+    ``jax.lax.axis_size`` is absent on 0.4.x; psum of a unit constant folds
+    to the same static value there."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+# --------------------------------------------------------------------------
+# compile-result introspection
+# --------------------------------------------------------------------------
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every supported JAX
+    (0.4.x returns a singleton list of dicts, newer JAX the dict itself)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas-TPU compiler params across the rename:
+    ``pltpu.TPUCompilerParams`` (0.4.x) -> ``pltpu.CompilerParams`` (new)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

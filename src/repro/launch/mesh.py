@@ -5,15 +5,19 @@ innermost (fastest, level-1) axis, ``data`` the intra-pod DP axis, ``pod``
 the scarce top level.  ``make_production_mesh`` builds the assignment's
 16x16 single-pod (256 chips) and 2x16x16 multi-pod (512 chips) meshes.
 
+All mesh construction goes through ``jax_compat.make_mesh`` so the same
+code runs on the pinned JAX 0.4.x (no ``axis_types``) and on >= 0.5
+(explicit ``AxisType.Auto``).
+
 Functions, not module-level constants: importing this module never touches
 jax device state.
 """
 
 from __future__ import annotations
 
-import math
-
 import jax
+
+from .jax_compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_elastic_mesh", "dp_axes", "mesh_axis_sizes"]
 
@@ -21,7 +25,7 @@ __all__ = ["make_production_mesh", "make_elastic_mesh", "dp_axes", "mesh_axis_si
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_elastic_mesh(n_devices: int | None = None, model_parallel: int | None = None):
@@ -34,10 +38,7 @@ def make_elastic_mesh(n_devices: int | None = None, model_parallel: int | None =
     while n % mp:
         mp //= 2
     dp = n // mp
-    return jax.make_mesh(
-        (dp, mp), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        devices=devices[:n],
-    )
+    return make_mesh((dp, mp), ("data", "model"), devices=devices[:n])
 
 
 def dp_axes(mesh) -> tuple[str, ...]:

@@ -24,6 +24,7 @@ from ..models import build_model
 from ..optim.adamw import AdamWConfig
 from ..runtime.fault_tolerance import StragglerMonitor
 from ..runtime.trainer import Trainer
+from .jax_compat import make_mesh, use_mesh
 from .mesh import make_elastic_mesh
 
 
@@ -50,8 +51,7 @@ def main() -> None:
     mesh = None
     if args.mesh:
         dp, mp = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((dp, mp), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((dp, mp), ("data", "model"))
 
     pcfg = ParallelConfig(
         hierarchical_grad_sync=args.hierarchical_sync,
@@ -74,8 +74,7 @@ def main() -> None:
     pipe = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
     monitor = StragglerMonitor()
 
-    ctx = jax.set_mesh(mesh) if mesh is not None else _nullcontext()
-    with ctx:
+    with use_mesh(mesh):
         for step in range(start, args.steps):
             monitor.step_start()
             batch = {k: jnp.asarray(v) for k, v in pipe.global_batch_arrays(step).items()}
@@ -90,14 +89,6 @@ def main() -> None:
                 )
             if args.ckpt_dir and (step % args.ckpt_every == 0 or step == args.steps - 1):
                 save_checkpoint(args.ckpt_dir, step, (params, opt))
-
-
-class _nullcontext:
-    def __enter__(self):
-        return None
-
-    def __exit__(self, *a):
-        return False
 
 
 if __name__ == "__main__":

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..launch.jax_compat import resolve_mesh
+
 __all__ = [
     "Initializer",
     "dense_init",
@@ -115,18 +117,17 @@ def mlp_init(init: Initializer, d_model: int, d_ff: int, dtype):
     return params, axes
 
 
-def constrain_ff_hidden(h: jax.Array) -> jax.Array:
+def constrain_ff_hidden(h: jax.Array, mesh=None) -> jax.Array:
     """Pin the MLP hidden to [batch->dp, seq, ff->model] (Megatron TP): the
     GSPMD fixpoint sometimes replicates it in rematerialised backward
-    regions (8 GB/layer at Jamba scale)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or h.ndim != 3:
+    regions (8 GB/layer at Jamba scale).  ``mesh`` is an explicit
+    Mesh/MeshContext (ambient ``use_mesh`` as fallback); no-op without one."""
+    mesh = resolve_mesh(mesh)
+    if mesh is None or h.ndim != 3:
         return h
-    sizes = dict(mesh.shape)
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    dpn = 1
-    for a in dp:
-        dpn *= sizes[a]
+    sizes = mesh.axis_sizes()
+    dp = mesh.dp_axes()
+    dpn = mesh.dp_size()
     entries = [None, None, None]
     if dp and h.shape[0] % dpn == 0 and h.shape[0] >= dpn:
         entries[0] = dp
@@ -134,14 +135,14 @@ def constrain_ff_hidden(h: jax.Array) -> jax.Array:
         entries[2] = "model"
     if all(e is None for e in entries):
         return h
-    return jax.lax.with_sharding_constraint(h, jax.sharding.PartitionSpec(*entries))
+    return mesh.constrain(h, jax.sharding.PartitionSpec(*entries))
 
 
-def mlp_apply(params: dict, x: jax.Array, compute_dtype) -> jax.Array:
+def mlp_apply(params: dict, x: jax.Array, compute_dtype, mesh=None) -> jax.Array:
     w_gate = params["w_gate"].astype(compute_dtype)
     w_up = params["w_up"].astype(compute_dtype)
     w_down = params["w_down"].astype(compute_dtype)
-    h = constrain_ff_hidden(swiglu(x @ w_gate, x @ w_up))
+    h = constrain_ff_hidden(swiglu(x @ w_gate, x @ w_up), mesh)
     return h @ w_down
 
 

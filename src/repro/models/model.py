@@ -85,7 +85,7 @@ class Model:
             mask = mask.at[:, :n].set(0.0)
         return x, mask
 
-    def _encode(self, params, batch, compute):
+    def _encode(self, params, batch, compute, mesh=None):
         cfg = self.cfg
         fe = batch["encoder_frames"].astype(compute)
         x = fe @ params["frontend_proj"].astype(compute)
@@ -93,7 +93,7 @@ class Model:
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         x, _, _ = tf.stack_apply(
             params["encoder"], x, cfg, positions=positions, encoder=True,
-            n_layers=cfg.n_encoder_layers,
+            n_layers=cfg.n_encoder_layers, mesh=mesh,
         )
         return rms_norm(x, params["final_norm"], cfg.norm_eps)
 
@@ -119,11 +119,11 @@ class Model:
         return tuple(caches)
 
     # ---------------- training ----------------
-    def train_loss(self, params, batch, key=None, impl: str = "xla"):
+    def train_loss(self, params, batch, key=None, impl: str = "xla", mesh=None):
         cfg = self.cfg
         compute = jnp.dtype(cfg.compute_dtype)
         if cfg.enc_dec:
-            memory = self._encode(params, batch, compute)
+            memory = self._encode(params, batch, compute, mesh=mesh)
             x = params["embed"].astype(compute)[batch["tokens"]]
             mask = jnp.ones(batch["tokens"].shape, jnp.float32)
             b, s, _ = x.shape
@@ -131,14 +131,15 @@ class Model:
             cross = self._decoder_cross_caches(params, memory)
             caches = tuple({"cross": c} for c in cross)
             x, _, aux = tf.stack_apply(
-                params["decoder"], x, cfg, positions=positions, caches=caches, impl=impl, key=key
+                params["decoder"], x, cfg, positions=positions, caches=caches, impl=impl,
+                key=key, mesh=mesh,
             )
         else:
             x, mask = self._embed_inputs(params, batch, compute)
             b, s, _ = x.shape
             positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
             x, _, aux = tf.stack_apply(
-                params["decoder"], x, cfg, positions=positions, impl=impl, key=key
+                params["decoder"], x, cfg, positions=positions, impl=impl, key=key, mesh=mesh
             )
         logits = self._logits(params, x, compute)
         mask = mask * batch.get("mask", jnp.ones_like(mask))
@@ -156,12 +157,12 @@ class Model:
             dtype=jnp.dtype(cfg.compute_dtype),
         )
 
-    def prefill(self, params, batch, impl: str = "xla"):
+    def prefill(self, params, batch, impl: str = "xla", mesh=None):
         """Full forward over the prompt; returns (last_logits, caches)."""
         cfg = self.cfg
         compute = jnp.dtype(cfg.compute_dtype)
         if cfg.enc_dec:
-            memory = self._encode(params, batch, compute)
+            memory = self._encode(params, batch, compute, mesh=mesh)
             x = params["embed"].astype(compute)[batch["tokens"]]
             b, s, _ = x.shape
             positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
@@ -169,14 +170,15 @@ class Model:
             caches = tuple({"cross": c} for c in cross)
             x, new_caches, _ = tf.stack_apply(
                 params["decoder"], x, cfg, positions=positions, caches=caches,
-                update_cache=True, impl=impl,
+                update_cache=True, impl=impl, mesh=mesh,
             )
         else:
             x, _ = self._embed_inputs(params, batch, compute)
             b, s, _ = x.shape
             positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
             x, new_caches, _ = tf.stack_apply(
-                params["decoder"], x, cfg, positions=positions, update_cache=True, impl=impl
+                params["decoder"], x, cfg, positions=positions, update_cache=True, impl=impl,
+                mesh=mesh,
             )
         logits = self._logits(params, x[:, -1:], compute)
         return logits, new_caches
@@ -223,7 +225,7 @@ class Model:
 
         return tuple(relay_block(bc) for bc in caches)
 
-    def decode_step(self, params, caches, tokens, pos, impl: str = "xla"):
+    def decode_step(self, params, caches, tokens, pos, impl: str = "xla", mesh=None):
         """One token per sequence.  tokens [B, 1]; pos [B] absolute position.
 
         Returns (logits [B, 1, V], new_caches).
@@ -233,7 +235,7 @@ class Model:
         x = params["embed"].astype(compute)[tokens]
         positions = pos[:, None]
         x, new_caches, _ = tf.stack_apply(
-            params["decoder"], x, cfg, positions=positions, caches=caches, impl=impl
+            params["decoder"], x, cfg, positions=positions, caches=caches, impl=impl, mesh=mesh
         )
         logits = self._logits(params, x, compute)
         return logits, new_caches

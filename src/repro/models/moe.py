@@ -4,7 +4,8 @@ Paths:
   * ``moe_local``  — single-device reference: top-k routing, capacity-based
     scatter into per-expert buckets, expert SwiGLU, weighted combine.  This
     is the oracle for the sharded paths and the CPU smoke-test path.
-  * ``moe_sharded`` — expert parallelism inside ``jax.shard_map``: tokens
+  * ``moe_sharded`` — expert parallelism inside a manual ``shard_map``
+    region (entered via ``launch.jax_compat.shard_map``): tokens
     stay sharded over the data axes, experts over the ``model`` axis; the
     dispatch is a `lax.all_to_all` over ``model`` only — the CLEX rule of
     keeping the heavy all-to-all on level-1 (intra-pod, short) links.
@@ -24,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..launch import jax_compat
 from .layers import Initializer, dense_init, swiglu
 
 __all__ = ["moe_init", "moe_apply", "router_topk", "moe_local"]
@@ -179,7 +181,7 @@ def moe_replicated_ep(params, x_flat, cfg: ModelConfig, *, model_axis: str = "mo
     moe = cfg.moe
     compute = x_flat.dtype
     t = x_flat.shape[0]
-    m = jax.lax.axis_size(model_axis)
+    m = jax_compat.axis_size(model_axis)
     rank = jax.lax.axis_index(model_axis)
     e_local = moe.n_experts // m
 
@@ -203,44 +205,44 @@ def moe_replicated_ep(params, x_flat, cfg: ModelConfig, *, model_axis: str = "mo
     return jax.lax.psum(partial, model_axis), aux[None]
 
 
-def moe_apply(params, x, cfg: ModelConfig, *, impl: str = "xla", key=None):
+def moe_apply(params, x, cfg: ModelConfig, *, impl: str = "xla", key=None, mesh=None):
     """[B, S, D] -> ([B, S, D], aux).  Chooses the execution path from the
-    active mesh: token-sharded a2a EP when enough tokens, replicated EP for
-    tiny (decode) token counts, single-device reference otherwise."""
+    mesh threaded in by the caller (explicit Mesh/MeshContext; ambient
+    ``use_mesh`` as fallback): token-sharded a2a EP when enough tokens,
+    replicated EP for tiny (decode) token counts, single-device reference
+    otherwise."""
     P = jax.sharding.PartitionSpec
     b, s, d = x.shape
     x_flat = x.reshape(b * s, d)
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or "model" not in mesh.axis_names or mesh.shape["model"] == 1:
+    mesh = jax_compat.resolve_mesh(mesh)
+    if mesh is None or "model" not in mesh.axis_names or mesh.model_size() == 1:
         out, aux = moe_local(params, x_flat, cfg, impl=impl)
         return out.reshape(b, s, d), aux
 
-    dp_axes = tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
-    dp = 1
-    for ax in dp_axes:
-        dp *= mesh.shape[ax]
-    m_size = mesh.shape["model"]
+    dp_axes = mesh.dp_axes()
+    dp = mesh.dp_size()
+    m_size = mesh.model_size()
     tokens = b * s
     names = set(dp_axes) | {"model"}
 
     if tokens % (dp * m_size) == 0 and tokens // (dp * m_size) >= cfg.moe.top_k:
         token_spec = P((*dp_axes, "model"), None)
-        out, aux = jax.shard_map(
+        out, aux = jax_compat.shard_map(
             lambda p, xf: moe_sharded_a2a(p, xf, cfg, key=key),
+            mesh=mesh,
             in_specs=(_expert_specs(cfg), token_spec),
             out_specs=(token_spec, P((*dp_axes, "model"))),
             axis_names=names,
-            check_vma=False,
         )(params, x_flat)
     else:
         shard_tokens = dp > 1 and tokens % dp == 0 and tokens >= dp
         token_spec = P(dp_axes, None) if shard_tokens else P(None, None)
-        out, aux = jax.shard_map(
+        out, aux = jax_compat.shard_map(
             lambda p, xf: moe_replicated_ep(p, xf, cfg),
+            mesh=mesh,
             in_specs=(_expert_specs(cfg), token_spec),
             out_specs=(token_spec, P((*dp_axes, "model"))),
             axis_names=names,
-            check_vma=False,
         )(params, x_flat)
     return out.reshape(b, s, d), aux.mean()
 

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..launch.jax_compat import resolve_mesh
 from . import attention as attn_mod
 from . import moe as moe_mod
 from . import ssm as ssm_mod
@@ -27,19 +28,18 @@ from .layers import Initializer, mlp_apply, mlp_init, rms_norm
 __all__ = ["block_init", "block_apply", "stack_init", "stack_apply", "init_stack_cache"]
 
 
-def constrain_residual(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def constrain_residual(x: jax.Array, cfg: ModelConfig, mesh=None) -> jax.Array:
     """Sequence-parallel residual stream (Megatron-SP adapted to GSPMD):
     saved layer boundaries are sharded [batch->dp, seq->model], cutting the
-    dominant remat-residual footprint by the TP degree.  No-op when no mesh
-    is active or dims don't divide."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or x.ndim != 3:
+    dominant remat-residual footprint by the TP degree.  ``mesh`` is the
+    explicitly threaded Mesh/MeshContext (ambient ``use_mesh`` as fallback);
+    no-op when no mesh is given or dims don't divide."""
+    mesh = resolve_mesh(mesh)
+    if mesh is None or x.ndim != 3:
         return x
-    sizes = dict(mesh.shape)
-    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    dpn = 1
-    for a in dp:
-        dpn *= sizes[a]
+    sizes = mesh.axis_sizes()
+    dp = mesh.dp_axes()
+    dpn = mesh.dp_size()
     entries = [None, None, None]
     if dp and x.shape[0] % dpn == 0 and x.shape[0] >= dpn:
         entries[0] = dp
@@ -52,7 +52,7 @@ def constrain_residual(x: jax.Array, cfg: ModelConfig) -> jax.Array:
         entries[1] = "model"
     if all(e is None for e in entries):
         return x
-    return jax.lax.with_sharding_constraint(x, jax.sharding.PartitionSpec(*entries))
+    return mesh.constrain(x, jax.sharding.PartitionSpec(*entries))
 
 
 def _mixer_kind(cfg: ModelConfig, j: int, encoder: bool) -> str:
@@ -141,6 +141,7 @@ def block_apply(
     causal=True,
     impl="xla",
     key=None,
+    mesh=None,
 ):
     """Returns (x, new_cache, aux)."""
     kind = _mixer_kind(cfg, j, encoder)
@@ -183,9 +184,9 @@ def block_apply(
     if "ffn" in params:
         h2 = rms_norm(x, params["ln2"], cfg.norm_eps)
         if cfg.layer_is_moe(j) and not encoder:
-            out2, aux = moe_mod.moe_apply(params["ffn"], h2, cfg, impl=impl, key=key)
+            out2, aux = moe_mod.moe_apply(params["ffn"], h2, cfg, impl=impl, key=key, mesh=mesh)
         else:
-            out2 = mlp_apply(params["ffn"], h2, x.dtype)
+            out2 = mlp_apply(params["ffn"], h2, x.dtype, mesh=mesh)
         x = x + out2
 
     new_cache = None
@@ -288,6 +289,7 @@ def stack_apply(
     impl: str = "xla",
     key=None,
     n_layers: int | None = None,
+    mesh=None,
 ):
     """Returns (x, new_caches, aux_total)."""
     n_layers = n_layers or cfg.n_layers
@@ -308,7 +310,7 @@ def stack_apply(
                 layer_params = jax.tree.map(lambda t: t[rep], layer_params)
             x, nc, a = block_apply(
                 layer_params, x, cfg, j, positions=positions, cache=caches[i],
-                update_cache=update_cache, encoder=encoder, impl=impl, key=key,
+                update_cache=update_cache, encoder=encoder, impl=impl, key=key, mesh=mesh,
             )
             aux = aux + a
             new_caches.append(nc if nc is not None else {})
@@ -318,16 +320,16 @@ def stack_apply(
         h, aux = carry
         layer_params, layer_caches = xs
         new_caches = []
-        h = constrain_residual(h, cfg)
+        h = constrain_residual(h, cfg, mesh)
         for j in range(p):
             cache_j = layer_caches[j] if layer_caches is not None else None
             h, nc, a = block_apply(
                 layer_params[j], h, cfg, j, positions=positions, cache=cache_j,
-                update_cache=update_cache, encoder=encoder, impl=impl, key=key,
+                update_cache=update_cache, encoder=encoder, impl=impl, key=key, mesh=mesh,
             )
             aux = aux + a
             new_caches.append(nc if nc is not None else {})
-        h = constrain_residual(h, cfg)
+        h = constrain_residual(h, cfg, mesh)
         return (h, aux), tuple(new_caches)
 
     fn = body

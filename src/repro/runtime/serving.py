@@ -20,10 +20,14 @@ class ServingEngine:
     model: Model
     params: object
     max_len: int = 512
+    mesh: object | None = None  # Mesh/MeshContext threaded into the model
 
     def __post_init__(self):
-        self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(self.model.decode_step)
+        mesh = self.mesh
+        self._prefill = jax.jit(lambda p, b: self.model.prefill(p, b, mesh=mesh))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos, mesh=mesh)
+        )
 
     def generate(
         self,

@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig, ParallelConfig
 from ..core.collectives import hierarchical_all_reduce
+from ..launch import jax_compat
 from ..models import Model
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
 from . import sharding as shd
@@ -34,17 +35,25 @@ __all__ = ["Trainer", "make_train_step"]
 
 def make_train_step(model: Model, opt_cfg: AdamWConfig, pcfg: ParallelConfig, mesh=None,
                     microbatches: int = 1):
-    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``mesh`` (Mesh or MeshContext) is threaded into the model so its internal
+    sharding constraints / MoE dispatch see the hierarchy explicitly; it also
+    selects the hierarchical grad-sync path when the config asks for it."""
     cfg = model.cfg
+    mesh = jax_compat.MeshContext.from_any(mesh)
     use_hier = (
         pcfg.hierarchical_grad_sync
         and mesh is not None
         and "pod" in mesh.axis_names
         and cfg.moe is None
     )
+    # Inside the manual (shard_map) hierarchical region auto constraints are
+    # illegal: the model runs mesh-free there.
+    model_mesh = jax_compat.NO_MESH if use_hier else mesh
 
     def loss_fn(params, batch):
-        loss, metrics = model.train_loss(params, batch)
+        loss, metrics = model.train_loss(params, batch, mesh=model_mesh)
         return loss, metrics
 
     def grads_of(params, batch):
@@ -110,13 +119,12 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig, pcfg: ParallelConfig, me
         if pcfg.compress_cross_pod:
             in_opt["err"] = P(dp_axes)
             out_opt["err"] = P(dp_axes)
-        return jax.shard_map(
+        return jax_compat.shard_map(
             sharded,
             mesh=mesh,
             in_specs=(P(), in_opt, P(dp_axes, None)),
             out_specs=(P(), out_opt, P()),
             axis_names=set(dp_axes),
-            check_vma=False,
         )(params, opt_state, batch)
 
     return train_step
@@ -138,7 +146,7 @@ class Trainer:
         if self.pcfg.compress_cross_pod and self.mesh is not None:
             from ..core.collectives import error_feedback_slots
 
-            sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+            sizes = jax_compat.MeshContext.from_any(self.mesh).axis_sizes()
             n_low = sizes.get("data", 1)
             dp_total = n_low * sizes.get("pod", 1)
             slots = error_feedback_slots(params, n_low)

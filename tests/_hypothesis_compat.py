@@ -1,0 +1,92 @@
+"""``hypothesis`` shim for the property-based test modules.
+
+The pinned container has no ``hypothesis`` wheel and nothing may be
+installed at test time, so the property tests import ``given``/``settings``/
+``st`` from here: the real library when available (CI installs it), else a
+minimal deterministic fallback that covers exactly the strategy subset the
+suite uses (``integers``, ``sampled_from``, ``booleans``).
+
+The fallback draws ``max_examples`` pseudo-random examples from a PRNG
+seeded by the test's qualified name — every run executes the identical
+example set, so a failure reproduces exactly.  It is *not* hypothesis: no
+shrinking, no example database — just enough to keep the properties
+exercised under the pinned environment.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where the wheel exists
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: "random.Random"):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    st = _Strategies()
+
+    def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Accepts (and ignores) hypothesis-only knobs like ``deadline``."""
+
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return decorate
+
+    def given(**strategies):
+        def decorate(fn):
+            n = getattr(fn, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                rng = random.Random(fn.__qualname__)
+                for i in range(n):
+                    example = {name: s.draw(rng) for name, s in strategies.items()}
+                    try:
+                        fn(*args, **kwargs, **example)
+                    except Exception as e:  # noqa: BLE001 - annotate and re-raise
+                        raise AssertionError(
+                            f"falsified on example {i + 1}/{n}: {example!r}"
+                        ) from e
+
+            # strategy-provided args must not look like pytest fixtures
+            del runner.__wrapped__
+            params = [
+                p
+                for p in inspect.signature(fn).parameters.values()
+                if p.name not in strategies
+            ]
+            runner.__signature__ = inspect.Signature(params)
+            return runner
+
+        return decorate
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

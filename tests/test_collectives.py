@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.jax_compat import make_mesh, shard_map
 from repro.core.collectives import (
     CollectiveCostModel,
     compressed_psum,
@@ -28,9 +29,7 @@ from repro.core.collectives import (
 def mesh():
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 virtual devices")
-    return jax.make_mesh(
-        (2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 3
-    )
+    return make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def test_quantize_roundtrip():
@@ -54,10 +53,10 @@ def test_hierarchical_all_reduce_matches_flat(mesh):
         return jax.lax.pmean(x, ("pod", "data"))
 
     h = jax.jit(
-        jax.shard_map(hier, mesh=mesh, in_specs=P(), out_specs=P(), axis_names={"pod", "data"}, check_vma=False)
+        shard_map(hier, mesh=mesh, in_specs=P(), out_specs=P(), axis_names={"pod", "data"})
     )(g)
     f = jax.jit(
-        jax.shard_map(flat, mesh=mesh, in_specs=P(), out_specs=P(), axis_names={"pod", "data"}, check_vma=False)
+        shard_map(flat, mesh=mesh, in_specs=P(), out_specs=P(), axis_names={"pod", "data"})
     )(g)
     np.testing.assert_allclose(np.asarray(h), np.asarray(f), rtol=1e-6)
 
@@ -73,7 +72,7 @@ def test_hierarchical_all_reduce_padding(mesh):
         return out["g"]
 
     h = jax.jit(
-        jax.shard_map(hier, mesh=mesh, in_specs=P(), out_specs=P(), axis_names={"pod", "data"}, check_vma=False)
+        shard_map(hier, mesh=mesh, in_specs=P(), out_specs=P(), axis_names={"pod", "data"})
     )(g)
     np.testing.assert_allclose(np.asarray(h), np.asarray(g) * 4.0, rtol=1e-6)
 
@@ -87,7 +86,7 @@ def test_compressed_psum_error_feedback(mesh):
         return total, err
 
     total, err = jax.jit(
-        jax.shard_map(comp, mesh=mesh, in_specs=P(), out_specs=(P(), P()), axis_names={"pod"}, check_vma=False)
+        shard_map(comp, mesh=mesh, in_specs=P(), out_specs=(P(), P()), axis_names={"pod"})
     )(g)
     exact = np.asarray(g) * 2.0  # two pods, replicated input
     # error feedback: total + psum(err) == exact
@@ -110,10 +109,10 @@ def test_two_stage_all_to_all_matches_flat(mesh):
 
     spec = P(("pod", "data"))
     f = jax.jit(
-        jax.shard_map(flat, mesh=mesh, in_specs=spec, out_specs=spec, axis_names={"pod", "data"}, check_vma=False)
+        shard_map(flat, mesh=mesh, in_specs=spec, out_specs=spec, axis_names={"pod", "data"})
     )(x)
     s = jax.jit(
-        jax.shard_map(staged, mesh=mesh, in_specs=spec, out_specs=spec, axis_names={"pod", "data"}, check_vma=False)
+        shard_map(staged, mesh=mesh, in_specs=spec, out_specs=spec, axis_names={"pod", "data"})
     )(x)
     np.testing.assert_allclose(np.asarray(s), np.asarray(f), rtol=1e-6)
 

@@ -13,6 +13,7 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks.hlo_analysis import analyze_hlo
 from repro.configs.base import ParallelConfig, ShapeConfig, get_config
+from repro.launch.jax_compat import cost_analysis_dict, make_mesh, use_mesh
 from repro.launch.specs import abstract_caches, abstract_params, input_specs
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig, adamw_init
@@ -27,9 +28,7 @@ FAMILIES = ["internlm2-1.8b", "olmoe-1b-7b", "jamba-v0.1-52b", "mamba2-1.3b",
 def mesh():
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 virtual devices")
-    return jax.make_mesh(
-        (2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 3
-    )
+    return make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def _reduced(arch, **over):
@@ -42,14 +41,15 @@ def test_train_cell_lowers_and_compiles(arch, mesh):
     cfg = _reduced(arch)
     shape = ShapeConfig("train_tiny", seq_len=64, global_batch=8, kind="train")
     model = build_model(cfg)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params_abs = abstract_params(model)
         params_sh = shd.param_shardings(model.param_axes(), mesh, params_abs, fsdp_axis="data")
         opt_abs = jax.eval_shape(lambda p: adamw_init(p, AdamWConfig()), params_abs)
         opt_sh = shd.opt_state_shardings(params_sh, mesh)
         batch = input_specs(cfg, shape)
         batch_sh = shd.batch_shardings(batch, mesh)
-        step = make_train_step(model, AdamWConfig(), ParallelConfig(), mesh=None)
+        step = make_train_step(model, AdamWConfig(),
+                               ParallelConfig(hierarchical_grad_sync=False), mesh=mesh)
         compiled = jax.jit(
             step,
             in_shardings=(params_sh, opt_sh, batch_sh),
@@ -66,7 +66,7 @@ def test_decode_cell_lowers_and_compiles(arch, mesh):
     cfg = _reduced(arch, scan_layers=False, param_dtype="bfloat16")
     shape = ShapeConfig("decode_tiny", seq_len=128, global_batch=8, kind="decode")
     model = build_model(cfg)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params_abs = abstract_params(model)
         params_sh = shd.param_shardings(model.param_axes(), mesh, params_abs)
         caches_abs = abstract_caches(model, shape)
@@ -86,7 +86,7 @@ def test_prefill_cell_lowers_and_compiles(mesh):
     cfg = _reduced("qwen3-32b")
     shape = ShapeConfig("prefill_tiny", seq_len=256, global_batch=8, kind="prefill")
     model = build_model(cfg)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params_abs = abstract_params(model)
         params_sh = shd.param_shardings(model.param_axes(), mesh, params_abs)
         batch = input_specs(cfg, shape)
@@ -94,4 +94,4 @@ def test_prefill_cell_lowers_and_compiles(mesh):
         compiled = jax.jit(model.prefill, in_shardings=(params_sh, batch_sh)).lower(
             params_abs, batch
         ).compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    assert cost_analysis_dict(compiled)["flops"] > 0

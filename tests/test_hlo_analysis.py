@@ -6,9 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.hlo_analysis import _expand_replica_groups, analyze_hlo
+from repro.launch.jax_compat import cost_analysis_dict, make_mesh, use_mesh
 
 
 def test_plain_matmul_flops_exact():
@@ -33,18 +35,19 @@ def test_scan_trip_count_scaling():
     a = analyze_hlo(c.as_text())
     # XLA's own cost_analysis undercounts by 4x; ours must not
     assert a.flops == pytest.approx(4 * 2 * 64**3, rel=0.01)
-    assert c.cost_analysis()["flops"] < a.flops / 2
+    assert cost_analysis_dict(c)["flops"] < a.flops / 2
 
 
 def test_spmd_per_device_flops_and_collectives():
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 virtual devices")
-    mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
-    with jax.set_mesh(mesh):
+    mesh = make_mesh((8,), ("model",))
+    ns = lambda spec: NamedSharding(mesh, spec)  # 0.4.x jit rejects raw specs
+    with use_mesh(mesh):
         c = jax.jit(
             lambda a, b: a @ b,
-            in_shardings=(P(None, "model"), P("model", None)),
-            out_shardings=P(None, None),
+            in_shardings=(ns(P(None, "model")), ns(P("model", None))),
+            out_shardings=ns(P(None, None)),
         ).lower(
             jax.ShapeDtypeStruct((256, 256), jnp.float32),
             jax.ShapeDtypeStruct((256, 256), jnp.float32),
@@ -59,17 +62,18 @@ def test_spmd_per_device_flops_and_collectives():
 def test_collective_inside_scan_counts_trips():
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 virtual devices")
-    mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("model",))
+    ns = lambda spec: NamedSharding(mesh, spec)  # 0.4.x jit rejects raw specs
 
     def f(x):
         def body(h, _):
-            return jax.lax.with_sharding_constraint(h @ h.T, P(None, "model")), None
+            return jax.lax.with_sharding_constraint(h @ h.T, ns(P(None, "model"))), None
 
         h, _ = jax.lax.scan(body, x, jnp.arange(3))
         return h
 
-    with jax.set_mesh(mesh):
-        c = jax.jit(f, in_shardings=P(None, "model"), out_shardings=P(None, "model")).lower(
+    with use_mesh(mesh):
+        c = jax.jit(f, in_shardings=ns(P(None, "model")), out_shardings=ns(P(None, "model"))).lower(
             jax.ShapeDtypeStruct((128, 128), jnp.float32)
         ).compile()
     a = analyze_hlo(c.as_text())

@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import MoEConfig, get_config
+from repro.launch.jax_compat import make_mesh, use_mesh
 from repro.models.moe import moe_apply, moe_local, router_topk
 
 D, T = 64, 64
@@ -35,9 +36,7 @@ def _params(cfg, key):
 def mesh():
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 virtual devices")
-    return jax.make_mesh(
-        (2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 3
-    )
+    return make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def test_router_topk_normalised():
@@ -58,7 +57,7 @@ def test_sharded_a2a_matches_local(mesh):
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.normal(size=(2, T // 2, D)), jnp.float32)  # [B,S,D]
     ref, aux_ref = moe_local(params, x.reshape(T, D), cfg)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         out, aux = jax.jit(lambda p, x: moe_apply(p, x, cfg))(params, x)
     np.testing.assert_allclose(np.asarray(out.reshape(T, D)), np.asarray(ref), atol=2e-5)
 
@@ -70,7 +69,7 @@ def test_replicated_ep_matches_local(mesh):
     rng = np.random.default_rng(2)
     x = jnp.asarray(rng.normal(size=(2, 1, D)), jnp.float32)  # 2 tokens: decode-like
     ref, _ = moe_local(params, x.reshape(2, D), cfg)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         out, _ = jax.jit(lambda p, x: moe_apply(p, x, cfg))(params, x)
     np.testing.assert_allclose(np.asarray(out.reshape(2, D)), np.asarray(ref), atol=2e-5)
 
@@ -100,7 +99,7 @@ def test_valiant_shuffle_preserves_semantics(mesh):
     params = _params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(4)
     x = jnp.asarray(rng.normal(size=(2, T // 2, D)), jnp.float32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         out_plain, _ = jax.jit(lambda p, x: moe_apply(p, x, cfg))(params, x)
         out_val, _ = jax.jit(
             lambda p, x, k: moe_apply(p, x, cfg_v, key=k)

@@ -15,6 +15,7 @@ import pytest
 from repro.checkpoint.checkpointing import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs.base import ParallelConfig, get_config
 from repro.data.pipeline import SyntheticLM
+from repro.launch.jax_compat import make_mesh, use_mesh
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
 from repro.runtime.fault_tolerance import StragglerMonitor, plan_remesh, run_with_restarts
@@ -114,13 +115,11 @@ def test_hierarchical_trainer_matches_auto():
     """CLEX-staged explicit grad sync == XLA auto sync (dense arch)."""
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 virtual devices")
-    mesh = jax.make_mesh(
-        (2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 3
-    )
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     model = _tiny_model()
     pipe = SyntheticLM(vocab=model.cfg.vocab, seq_len=32, global_batch=8, seed=2)
     batch = {k: jnp.asarray(v) for k, v in pipe.global_batch_arrays(0).items()}
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         auto = Trainer(model, AdamWConfig(lr=1e-3),
                        ParallelConfig(hierarchical_grad_sync=False), mesh=mesh)
         hier = Trainer(model, AdamWConfig(lr=1e-3),
@@ -139,13 +138,11 @@ def test_hierarchical_trainer_matches_auto():
 def test_compressed_cross_pod_sync_close_and_error_fed():
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 virtual devices")
-    mesh = jax.make_mesh(
-        (2, 2, 2), ("pod", "data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 3
-    )
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     model = _tiny_model()
     pipe = SyntheticLM(vocab=model.cfg.vocab, seq_len=32, global_batch=8, seed=2)
     batch = {k: jnp.asarray(v) for k, v in pipe.global_batch_arrays(0).items()}
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         ref = Trainer(model, AdamWConfig(lr=1e-3), ParallelConfig(), mesh=mesh)
         comp = Trainer(model, AdamWConfig(lr=1e-3),
                        ParallelConfig(compress_cross_pod=True), mesh=mesh)

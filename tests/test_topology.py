@@ -3,8 +3,7 @@
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import CLEXTopology, TorusTopology, copy_index, digit, with_digit
 
