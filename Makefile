@@ -1,10 +1,16 @@
 PYTEST ?= python -m pytest
 
+# Coverage gate: enforced whenever pytest-cov is importable (CI always
+# installs it via requirements-dev.txt; the pinned container may lack the
+# wheel, in which case verify runs without the gate rather than failing on
+# a missing plugin).  70 is a floor — raise it as coverage grows.
+COVFLAGS := $(shell python -c "import pytest_cov" 2>/dev/null && echo "--cov=repro --cov-fail-under=70")
+
 .PHONY: verify test deps
 
 # Tier-1 gate: the full seed suite on the pinned JAX (see docs/COMPAT.md).
 verify:
-	PYTHONPATH=src $(PYTEST) -x -q
+	PYTHONPATH=src $(PYTEST) -x -q $(COVFLAGS)
 
 test:
 	PYTHONPATH=src $(PYTEST) -q

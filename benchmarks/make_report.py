@@ -1,22 +1,56 @@
-"""Regenerate the §Dry-run / §Roofline sections of EXPERIMENTS.md from the
-dry-run artifacts.  Keeps hand-written sections (everything outside the
-AUTO-GENERATED markers) intact."""
+"""Regenerate the auto-generated sections of EXPERIMENTS.md:
+
+* §Roofline — from the dry-run artifacts (unchanged behaviour);
+* §Simulator — scenario matrix, fault-degradation curve, and all-to-all
+  flooding results from ``benchmarks/results/bench_results.json`` (written
+  by ``python -m benchmarks.run``).
+
+Hand-written sections (everything outside the AUTO-* markers) are kept
+intact; a skeleton EXPERIMENTS.md is created when missing.
+"""
 
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
-from benchmarks import roofline
-
 BEGIN = "<!-- AUTO-ROOFLINE-BEGIN -->"
 END = "<!-- AUTO-ROOFLINE-END -->"
+SIM_BEGIN = "<!-- AUTO-SIM-BEGIN -->"
+SIM_END = "<!-- AUTO-SIM-END -->"
+
+SKELETON = f"""# Experiments
+
+## Simulator (scenario engine / fault injection)
+
+{SIM_BEGIN}
+{SIM_END}
+
+## Dry-run / Roofline
+
+{BEGIN}
+{END}
+"""
 
 
-def build() -> str:
+def _markdown_table(rows: list[dict]) -> str:
+    if not rows:
+        return "(no rows)"
+    cols = list(dict.fromkeys(c for r in rows for c in r))  # union, first-seen order
+    lines = ["| " + " | ".join(cols) + " |",
+             "| " + " | ".join("---" for _ in cols) + " |"]
+    for r in rows:
+        lines.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(lines)
+
+
+def build_roofline() -> str:
+    from benchmarks import roofline
+
     lines = []
     for mesh, label in [("single", "single pod (16x16 = 256 chips)"),
                         ("multi", "two pods (2x16x16 = 512 chips)")]:
@@ -38,13 +72,53 @@ def build() -> str:
     return "\n".join(lines)
 
 
-def main() -> None:
-    path = "EXPERIMENTS.md"
+def build_simulator(results_path: str = "benchmarks/results/bench_results.json") -> str:
+    if not os.path.exists(results_path):
+        return "\n(no bench_results.json — run `python -m benchmarks.run` first)\n"
+    with open(results_path) as f:
+        results = json.load(f)
+    lines = []
+    mat = results.get("scenario_matrix")
+    if mat:
+        rows = mat["rows"] if isinstance(mat, dict) else mat
+        header = (f" ({mat['clex']} vs torus {mat['torus']}, mode={mat['mode']})"
+                  if isinstance(mat, dict) else "")
+        lines += [f"\n### Scenario matrix{header}\n", _markdown_table(rows), ""]
+    curve = results.get("fault_degradation")
+    if curve:
+        rows = curve["rows"] if isinstance(curve, dict) else curve
+        lines += ["\n### Fault degradation (delivery stays 1.0 for live pairs)\n",
+                  _markdown_table(rows), ""]
+    a2a = results.get("all_to_all_sim")
+    if a2a:
+        rows = ([{"run": "clean", **a2a["clean"]}, {"run": "faulty", **a2a["faulty"]}]
+                if isinstance(a2a, dict) and "clean" in a2a else [a2a])
+        lines += ["\n### All-to-all flooding vs analytic bound (Sec. II-C)\n",
+                  _markdown_table(rows), ""]
+    return "\n".join(lines) if lines else "\n(no simulator sections in results)\n"
+
+
+def _splice(text: str, begin: str, end: str, body: str) -> str:
+    if begin not in text or end not in text:
+        return text
+    pre, rest = text.split(begin, 1)
+    _, post = rest.split(end, 1)
+    return pre + begin + "\n" + body + "\n" + end + post
+
+
+def main(path: str = "EXPERIMENTS.md",
+         results_path: str = "benchmarks/results/bench_results.json") -> None:
+    if not os.path.exists(path):
+        with open(path, "w") as f:
+            f.write(SKELETON)
     text = open(path).read()
-    pre, rest = text.split(BEGIN, 1)
-    _, post = rest.split(END, 1)
-    open(path, "w").write(pre + BEGIN + "\n" + build() + "\n" + END + post)
-    print("EXPERIMENTS.md roofline section regenerated")
+    text = _splice(text, SIM_BEGIN, SIM_END, build_simulator(results_path))
+    try:
+        text = _splice(text, BEGIN, END, build_roofline())
+    except Exception as e:  # noqa: BLE001 - roofline artifacts are optional
+        text = _splice(text, BEGIN, END, f"\n(roofline unavailable: {e})\n")
+    open(path, "w").write(text)
+    print(f"{path} auto-generated sections refreshed")
 
 
 if __name__ == "__main__":

@@ -65,3 +65,64 @@ def run_table(name: str, full: bool = False, seed: int = 1):
 
 def run_all_tables(full: bool = False):
     return [run_table(s[0], full=full) for s in _SETTINGS]
+
+
+# ---- scenario engine / fault injection (beyond the paper's tables) --------
+# CI-scale topologies: CLEX and torus at the same node count for a fair
+# matrix; --full uses the paper's C(1/3,3) against the equivalent torus.
+def _scenario_topos(full: bool):
+    from repro.core import CLEXTopology, TorusTopology
+
+    if full:
+        return CLEXTopology(16, 3), TorusTopology.cube(16)
+    return CLEXTopology(8, 3), TorusTopology.cube(8)
+
+
+def run_scenario_matrix(full: bool = False, mode: str = "dense", seed: int = 0):
+    """CLEX vs torus DOR across all registered traffic scenarios."""
+    from repro.core import scenario_matrix
+
+    clex, torus = _scenario_topos(full)
+    msgs = 4 if full else 3
+    return {
+        "clex": f"C(1/{clex.L},{clex.L}) m={clex.m} n={clex.n}",
+        "torus": f"{torus.k1}^3 n={torus.n}",
+        "msgs_per_node": msgs,
+        "mode": mode,
+        "rows": scenario_matrix(clex, torus, msgs_per_node=msgs, mode=mode, seed=seed),
+    }
+
+
+def run_fault_curve(full: bool = False, seed: int = 0):
+    """Delivery/degradation vs injected fault rate on C(s, 1/s)."""
+    from repro.core import fault_degradation_curve
+
+    clex, _ = _scenario_topos(full)
+    return {
+        "topo": f"m={clex.m} L={clex.L} n={clex.n}",
+        "rows": fault_degradation_curve(clex, msgs_per_node=4 if full else 3, seed=seed),
+    }
+
+
+def run_all_to_all(full: bool = False, seed: int = 0):
+    """Sec. II-C flooding schedule vs the analytic bound, fault-free and
+    under 5% node faults."""
+    import numpy as np
+
+    from repro.core import CLEXTopology, FaultSet, simulate_all_to_all
+    from repro.core.scenarios import asymmetric_bandwidth
+
+    # explicit all-pairs traffic: keep n within the simulator's cap
+    clex = CLEXTopology(12, 3) if full else CLEXTopology(8, 3)
+    bw = asymmetric_bandwidth(clex)
+    clean = simulate_all_to_all(clex, bandwidth=bw)
+    faults = FaultSet.sample(clex, node_rate=0.05, edge_rate=0.02,
+                             rng=np.random.default_rng(seed))
+    degraded = simulate_all_to_all(clex, bandwidth=bw, faults=faults, seed=seed)
+    return {
+        "topo": f"m={clex.m} L={clex.L} n={clex.n}",
+        "bandwidth": bw,
+        "clean": clean.row(),
+        "faulty": degraded.row(),
+        "fault_summary": degraded.fault_summary,
+    }

@@ -1,7 +1,11 @@
-"""Reproduce the paper's Figure 3 + Tables I-IV at configurable scale.
+"""Reproduce the paper's Figure 3 + Tables I-IV at configurable scale, then
+run the scenario engine beyond the paper: CLEX-vs-torus across adversarial
+traffic regimes, the fault-injection degradation curve, and the Sec. II-C
+all-to-all flooding schedule against its analytic bound.
 
   PYTHONPATH=src python examples/clex_simulation.py            # reduced
   PYTHONPATH=src python examples/clex_simulation.py --full     # 32^4 / 64^3
+  PYTHONPATH=src python examples/clex_simulation.py --skip-tables
 """
 
 import argparse
@@ -10,23 +14,56 @@ import sys
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
-from benchmarks.paper_tables import run_all_tables
+from benchmarks.paper_tables import (
+    run_all_tables,
+    run_all_to_all,
+    run_fault_curve,
+    run_scenario_matrix,
+)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip-tables", action="store_true",
+                    help="only the scenario/fault/all-to-all sections")
     args = ap.parse_args()
-    for res in run_all_tables(full=args.full):
-        print(f"\n== {res['name']} ({res['mode']}, {res['n_nodes']} nodes, "
-              f"{res['msgs_per_node']} msgs/node, {res['wall_s']}s) ==")
-        for row in res["rows"]:
-            paper = row.get("paper")
-            extra = f"   paper(max_rds,avg_rds,load,hops)={paper}" if paper else ""
-            print(f"  lvl {row['lvl']}: max_rds={row['max_rds']} avg_rds={row['avg_rds']} "
-                  f"load={row['max_avg_load']} hops={row['avg_hops']}{extra}")
-        print(f"  derived: {res['derived']}"
-              + (f"   paper: prop/hop/bw={res['paper_derived']}" if res["paper_derived"] else ""))
+
+    if not args.skip_tables:
+        for res in run_all_tables(full=args.full):
+            print(f"\n== {res['name']} ({res['mode']}, {res['n_nodes']} nodes, "
+                  f"{res['msgs_per_node']} msgs/node, {res['wall_s']}s) ==")
+            for row in res["rows"]:
+                paper = row.get("paper")
+                extra = f"   paper(max_rds,avg_rds,load,hops)={paper}" if paper else ""
+                print(f"  lvl {row['lvl']}: max_rds={row['max_rds']} avg_rds={row['avg_rds']} "
+                      f"load={row['max_avg_load']} hops={row['avg_hops']}{extra}")
+            print(f"  derived: {res['derived']}"
+                  + (f"   paper: prop/hop/bw={res['paper_derived']}" if res["paper_derived"] else ""))
+
+    mat = run_scenario_matrix(full=args.full)
+    print(f"\n== scenario matrix: {mat['clex']} vs torus {mat['torus']} "
+          f"({mat['msgs_per_node']} msgs/node, {mat['mode']}) ==")
+    for r in mat["rows"]:
+        val = (f" valiant(rds={r['clex_valiant_sum_avg_rds']},"
+               f" max_rds_l1={r['clex_valiant_max_rds_l1']})"
+               if "clex_valiant_sum_avg_rds" in r else "")
+        print(f"  {r['scenario']:>10}: clex rds={r['clex_sum_avg_rds']} "
+              f"(max_rds_l1={r['clex_max_rds_l1']} load_l1={r['clex_max_load_l1']}){val}"
+              f" | torus rds={r['torus_avg_rds']} (congestion x{r['torus_congestion']})"
+              f" | gain x{r['rounds_gain_vs_torus']}")
+
+    curve = run_fault_curve(full=args.full)
+    print(f"\n== fault degradation on {curve['topo']} ==")
+    for r in curve["rows"]:
+        print(f"  rate={r['node_rate']:>5}: dead={r['dead_nodes']}n/{r['dead_edges']}e "
+              f"delivered={r['delivered_fraction']} detours={r['detours']} "
+              f"slowdown=x{r['slowdown_vs_fault_free']}")
+
+    a2a = run_all_to_all(full=args.full)
+    print(f"\n== all-to-all flooding on {a2a['topo']} (asymmetric bandwidth {a2a['bandwidth']}) ==")
+    print(f"  clean : {a2a['clean']}")
+    print(f"  faulty: {a2a['faulty']}   injected: {a2a['fault_summary']}")
 
 
 if __name__ == "__main__":

@@ -1,30 +1,52 @@
-"""CLEX core: topology, routing, simulation, analysis, and the JAX
-hierarchical collectives that port the paper's technique to TPU meshes."""
+"""CLEX core: topology, routing, simulation, scenario engine, fault
+injection, analysis, and the JAX hierarchical collectives that port the
+paper's technique to TPU meshes."""
 
 from .analysis import DerivedComparison, all_to_all_comparison, derive_comparison
 from .routing import (
+    UnroutableError,
     all_to_all_tree_hops,
     bundle_hop,
     copy_schedule,
+    flood_route,
     log_star,
     sample_gateways,
+    sample_gateways_faulty,
     unrolled_schedule,
     valiant_intermediate,
 )
+from .scenarios import (
+    SCENARIOS,
+    AllToAllResult,
+    TrafficScenario,
+    fault_degradation_curve,
+    make_traffic,
+    run_clex_scenario,
+    run_torus_scenario,
+    scenario_matrix,
+    simulate_all_to_all,
+)
 from .simulator import (
+    ClexMachine,
     LevelStats,
     SimulationResult,
     simulate_point_to_point,
     uniform_permutation_traffic,
 )
-from .topology import CLEXTopology, TorusTopology, copy_index, digit, with_digit
+from .topology import CLEXTopology, FaultSet, TorusTopology, copy_index, digit, with_digit
 
 __all__ = [
+    "AllToAllResult",
     "CLEXTopology",
-    "TorusTopology",
+    "ClexMachine",
     "DerivedComparison",
+    "FaultSet",
     "LevelStats",
+    "SCENARIOS",
     "SimulationResult",
+    "TorusTopology",
+    "TrafficScenario",
+    "UnroutableError",
     "all_to_all_comparison",
     "all_to_all_tree_hops",
     "bundle_hop",
@@ -32,8 +54,16 @@ __all__ = [
     "copy_schedule",
     "derive_comparison",
     "digit",
+    "fault_degradation_curve",
+    "flood_route",
     "log_star",
+    "make_traffic",
+    "run_clex_scenario",
+    "run_torus_scenario",
     "sample_gateways",
+    "sample_gateways_faulty",
+    "scenario_matrix",
+    "simulate_all_to_all",
     "simulate_point_to_point",
     "uniform_permutation_traffic",
     "unrolled_schedule",

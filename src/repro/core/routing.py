@@ -18,17 +18,25 @@ from typing import Iterator
 
 import numpy as np
 
-from .topology import CLEXTopology, copy_index, digit
+from .topology import CLEXTopology, FaultSet, copy_index, digit
 
 __all__ = [
     "log_star",
     "copy_schedule",
     "unrolled_schedule",
     "sample_gateways",
+    "sample_gateways_faulty",
     "bundle_hop",
     "all_to_all_tree_hops",
+    "flood_route",
     "valiant_intermediate",
+    "UnroutableError",
 ]
+
+
+class UnroutableError(RuntimeError):
+    """Raised when injected faults disconnect a message from its destination
+    (no live gateway/edge exists after exhausting detours)."""
 
 
 def log_star(x: float) -> int:
@@ -116,28 +124,119 @@ def bundle_hop(
     dest: np.ndarray,
     level: int,
     rng: np.random.Generator,
+    faults: FaultSet | None = None,
+    audit: list | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Step 2 of A(level): every message crosses its gateway's level-l bundle,
     load-balanced over the bundle's m edges (surplus edges chosen u.a.r. via a
     per-gateway random permutation).
 
+    With ``faults``, only live edges (edge alive AND target node alive) are
+    used: the rank-balancing spreads messages over the surviving edges of
+    each bundle, so a bundle with q < m live edges simply needs ~m/q times
+    as many rounds — the paper's graceful-degradation argument.  Every
+    gateway must have >= 1 live edge (guaranteed by fault-aware gateway
+    sampling); otherwise :class:`UnroutableError` is raised.
+
     Returns (new_positions, rounds) where rounds[i] >= 1 is the round in which
-    message i crossed (ceil((rank+1)/m) for its random rank at its gateway).
+    message i crossed (ceil((rank+1)/q) for its random rank at its gateway,
+    q = live edges of that bundle).  ``audit``, if given, receives a record
+    of every traversed edge for invariant checking.
     """
     m = topo.m
     b = digit(dest, level - 1, m)
     ranks, _ = _per_key_ranks(cur, rng)
-    # per-gateway random permutation of edge indices via per-(gateway, slot) keys
-    slot = ranks % m
     gw_ids, gw_inv = np.unique(cur, return_inverse=True)
-    perms = np.argsort(rng.random((gw_ids.shape[0], m)), axis=1)
-    edge = perms[gw_inv, slot]
-    rounds = ranks // m + 1
+    if faults is None:
+        # per-gateway random permutation of edge indices
+        slot = ranks % m
+        perms = np.argsort(rng.random((gw_ids.shape[0], m)), axis=1)
+        edge = perms[gw_inv, slot]
+        rounds = ranks // m + 1
+    else:
+        allowed = faults.live_edge_mask(gw_ids, level)  # [G, m]
+        counts = allowed.sum(axis=1)
+        if (counts == 0).any():
+            raise UnroutableError(
+                f"gateway with zero live level-{level} bundle edges selected"
+            )
+        # random permutation per gateway with dead edges pushed past the end
+        noise = rng.random((gw_ids.shape[0], m)) + np.where(allowed, 0.0, 2.0)
+        perms = np.argsort(noise, axis=1)
+        q = counts[gw_inv]
+        edge = perms[gw_inv, ranks % q]
+        rounds = ranks // q + 1
     low_span = m ** (level - 2)
     lows = cur % low_span
     upper = copy_index(cur, level, m)
     new = upper * m**level + b * m ** (level - 1) + edge * low_span + lows
-    return new.astype(np.int64), rounds.astype(np.int64)
+    new = new.astype(np.int64)
+    rounds = rounds.astype(np.int64)
+    if audit is not None:
+        audit.append(
+            {"level": level, "node": cur.copy(), "edge": edge.astype(np.int64),
+             "round": rounds.copy(), "target": new.copy()}
+        )
+    return new, rounds
+
+
+def sample_gateways_faulty(
+    topo: CLEXTopology,
+    cur: np.ndarray,
+    target_copy: np.ndarray,
+    level: int,
+    rng: np.random.Generator,
+    faults: FaultSet,
+    max_tries: int = 8,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fault-aware Step 1: sample a live gateway of ``cur``'s level-(l-1)
+    copy whose level-l bundle (digit l-2 == ``target_copy``) has >= 1 live
+    edge.  Returns ``(gateways, stuck)`` — ``stuck[i]`` marks messages for
+    which no live gateway toward ``target_copy[i]`` exists (the caller
+    detours those through a sibling copy).
+
+    Rejection-samples the free low digits; once tries are exhausted the
+    few remaining candidates are checked exhaustively, so ``stuck`` is
+    exact, not probabilistic.
+    """
+    m = topo.m
+    base = copy_index(cur, level - 1, m) * m ** (level - 1)
+    low_span = m ** (level - 2)
+    nmsg = cur.shape[0]
+
+    def ok(gw: np.ndarray) -> np.ndarray:
+        good = faults.node_alive(gw)
+        if good.any():
+            gw_ids, gw_inv = np.unique(gw, return_inverse=True)
+            good &= faults.live_edge_mask(gw_ids, level).any(axis=1)[gw_inv]
+        return good
+
+    lows = rng.integers(0, low_span, size=nmsg, dtype=np.int64) if low_span > 1 else np.zeros(nmsg, dtype=np.int64)
+    gw = base + target_copy * low_span + lows
+    good = ok(gw)
+    tries = 1
+    while not good.all() and tries < max_tries and low_span > 1:
+        idx = np.flatnonzero(~good)
+        lows = rng.integers(0, low_span, size=idx.shape[0], dtype=np.int64)
+        cand = base[idx] + target_copy[idx] * low_span + lows
+        fixed = ok(cand)
+        gw[idx[fixed]] = cand[fixed]
+        good[idx[fixed]] = True
+        tries += 1
+    if not good.all():
+        # exhaustive check for the stragglers: enumerate all low_span
+        # candidates per unique (copy-base, target) pair
+        idx = np.flatnonzero(~good)
+        pair_keys = base[idx] * np.int64(m) + target_copy[idx]
+        for key in np.unique(pair_keys):
+            sel = idx[pair_keys == key]
+            pbase, ptgt = key // m, key % m
+            cand = pbase + ptgt * low_span + np.arange(low_span, dtype=np.int64)
+            live = cand[ok(cand)]
+            if live.size:
+                gw[sel] = rng.choice(live, size=sel.shape[0], replace=True)
+                good[sel] = True
+    return gw, ~good
 
 
 def all_to_all_tree_hops(topo: CLEXTopology) -> int:
@@ -146,18 +245,75 @@ def all_to_all_tree_hops(topo: CLEXTopology) -> int:
     return topo.L
 
 
+def flood_route(topo: CLEXTopology, src: np.ndarray, dst: np.ndarray) -> np.ndarray:
+    """Positions of the Sec. II-C flooding route, one edge per level.
+
+    The route pipelines the destination's top digit up through the node id:
+    one clique hop first plants ``dst``'s digit L-1 into digit 0; each
+    level-l crossing then moves it up one position (the bundle's target copy
+    is the *crossing node's* digit l-2) while the free parallel-edge choice
+    writes the final value ``dst``'s digit l-2 into the freed position:
+
+        hop 1 (clique):   digit 0      := dst_{L-1}
+        hop l (bundle l): digit l-1    := own digit l-2   (= dst_{L-1})
+                          digit l-2    := dst_{l-2}       (edge choice)
+
+    After hops 1, 2, ..., L every digit equals ``dst``'s — exactly L hops,
+    one per level, and (for full all-to-all traffic) a per-edge load of
+    exactly n/m on *every* directed clique and bundle edge, which is the
+    combinatorial heart of the paper's (1+o(1))-optimality claim.
+
+    Returns positions of shape ``(L + 1, nmsg)``: row 0 is ``src``, row 1
+    the post-clique-hop position, row l (l >= 2) the position after the
+    level-l bundle crossing; row L equals ``dst``.
+    """
+    m, L = topo.m, topo.L
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    pos = np.empty((L + 1, src.shape[0]), dtype=np.int64)
+    pos[0] = src
+    top = digit(dst, L - 1, m)
+    pos[1] = src + (top - digit(src, 0, m))  # with_digit(src, 0, top)
+    for level in range(2, L + 1):
+        cur = pos[level - 1]
+        low_span = m ** (level - 2)
+        b = digit(cur, level - 2, m)  # the pipelined dst top digit
+        edge = digit(dst, level - 2, m)
+        upper = copy_index(cur, level, m)
+        pos[level] = upper * m**level + b * m ** (level - 1) + edge * low_span + cur % low_span
+    if not np.array_equal(pos[L], dst):
+        raise AssertionError("flood route failed to reach destinations")
+    return pos
+
+
 def valiant_intermediate(
     topo: CLEXTopology,
     sources: np.ndarray,
     rng: np.random.Generator,
     within_level: int | None = None,
+    faults: FaultSet | None = None,
 ) -> np.ndarray:
     """Valiant's trick: u.i.r. intermediate destinations.  If ``within_level``
     is given, the "lightweight" variant of Sec. III-A: redistribute only
     inside the level-``within_level`` copy of each source (paper suggests
-    1/s - 1 or 1/s - 2), drastically reducing the 2x overhead."""
-    if within_level is None:
-        return rng.integers(0, topo.n, size=sources.shape[0], dtype=np.int64)
-    span = topo.m**within_level
-    lows = rng.integers(0, span, size=sources.shape[0], dtype=np.int64)
-    return (sources // span) * span + lows
+    1/s - 1 or 1/s - 2), drastically reducing the 2x overhead.  With
+    ``faults``, dead intermediates are rejection-resampled so the detour
+    never targets a dead node."""
+
+    def draw(srcs: np.ndarray) -> np.ndarray:
+        if within_level is None:
+            return rng.integers(0, topo.n, size=srcs.shape[0], dtype=np.int64)
+        span = topo.m**within_level
+        lows = rng.integers(0, span, size=srcs.shape[0], dtype=np.int64)
+        return (srcs // span) * span + lows
+
+    mid = draw(sources)
+    if faults is not None:
+        for _ in range(64):
+            bad = ~faults.node_alive(mid)
+            if not bad.any():
+                break
+            mid[bad] = draw(sources[bad])
+        if not faults.node_alive(mid).all():
+            raise UnroutableError("no live Valiant intermediate found")
+    return mid

@@ -34,10 +34,23 @@ import time
 
 import numpy as np
 
-from .routing import bundle_hop, copy_schedule, sample_gateways, unrolled_schedule
-from .topology import CLEXTopology, copy_index, digit
+from .routing import (
+    UnroutableError,
+    bundle_hop,
+    copy_schedule,
+    sample_gateways,
+    sample_gateways_faulty,
+    unrolled_schedule,
+)
+from .topology import CLEXTopology, FaultSet, copy_index, digit, with_digit
 
-__all__ = ["LevelStats", "SimulationResult", "simulate_point_to_point", "uniform_permutation_traffic"]
+__all__ = [
+    "ClexMachine",
+    "LevelStats",
+    "SimulationResult",
+    "simulate_point_to_point",
+    "uniform_permutation_traffic",
+]
 
 
 @dataclasses.dataclass
@@ -48,6 +61,7 @@ class LevelStats:
     hops_total: float = 0.0
     max_avg_load: float = 0.0
     n_messages: int = 0  # messages in the run (for averaging)
+    detours: int = 0  # fault-forced reroutes through a sibling copy
 
     @property
     def avg_rounds(self) -> float:
@@ -75,6 +89,10 @@ class SimulationResult:
     levels: dict[int, LevelStats]
     lb_phase_histogram: np.ndarray  # instances (over all A(1) call batches) by #phases
     wall_seconds: float
+    n_messages: int = 0  # live-pair messages actually routed
+    n_dropped_dead: int = 0  # messages dropped for a dead source/destination
+    fault_summary: dict | None = None  # FaultSet.describe() of the injected faults
+    audit: dict | None = None  # traversal trace (audit=True runs only)
 
     def table(self) -> list[dict]:
         return [self.levels[l].row() for l in sorted(self.levels)]
@@ -86,6 +104,16 @@ class SimulationResult:
     @property
     def sum_avg_hops(self) -> float:
         return sum(s.avg_hops for s in self.levels.values())
+
+    @property
+    def total_detours(self) -> int:
+        return sum(s.detours for s in self.levels.values())
+
+    @property
+    def delivered_fraction(self) -> float:
+        """Fraction of live-pair messages delivered — 1.0 by construction
+        (the simulator raises :class:`UnroutableError` otherwise)."""
+        return 1.0 if self.n_messages else 0.0
 
 
 def uniform_permutation_traffic(
@@ -121,18 +149,37 @@ def _segment_max(values: np.ndarray, seg_ids: np.ndarray, n_seg: int) -> np.ndar
     return out
 
 
-class _Machine:
-    """Batched executor of all concurrent instances of A(l)."""
+class ClexMachine:
+    """Batched executor of all concurrent instances of A(l).
 
-    def __init__(self, topo: CLEXTopology, mode: str, rng: np.random.Generator, max_phases: int = 50):
+    With ``faults`` the machine routes around dead nodes and dead bundle
+    edges: clique relays are restricted to live nodes, gateways are sampled
+    among live candidates with a live bundle edge, and bundle crossings
+    balance load over the surviving parallel edges.  ``audit=True`` records
+    every bundle-edge traversal and clique relay for invariant checks.
+    """
+
+    def __init__(
+        self,
+        topo: CLEXTopology,
+        mode: str,
+        rng: np.random.Generator,
+        max_phases: int = 50,
+        faults: FaultSet | None = None,
+        audit: bool = False,
+    ):
         if mode not in ("dense", "light"):
             raise ValueError(mode)
         self.topo = topo
         self.mode = mode
         self.rng = rng
+        self.faults = faults
         self.copies = copy_schedule(topo.m, max_phases)
         self.stats: dict[int, LevelStats] = {l: LevelStats(l) for l in range(1, topo.L + 1)}
         self.phase_hist = np.zeros(max_phases + 1, dtype=np.int64)
+        self.audit: dict | None = (
+            {"bundle": [], "relay": [], "positions": []} if audit else None
+        )
 
     # -- A(1): parallel randomized load balancing on all cliques at once ---
     def lb_call(self, cur: np.ndarray, dest: np.ndarray) -> np.ndarray:
@@ -164,23 +211,45 @@ class _Machine:
             hops[winners] = 1
             remaining[winners] = False
 
-        # Phases 2..: relay copies with balanced-random placement.
+        # Phases 2..: relay copies with balanced-random placement.  Each phase
+        # delivers >= 1 remaining message per (relay, destination) link, so
+        # the loop always terminates; concentrated destinations (adversarial
+        # scenarios, fault-repair traffic) can need far more phases than
+        # uniform traffic — the copy schedule extends at its cap on demand.
         phase = 1
+        max_phase = nmsg + len(self.copies)
         while remaining.any():
             phase += 1
+            if phase > max_phase:
+                raise RuntimeError("A(1) failed to terminate (no phase progress)")
             if phase >= len(self.copies):
-                raise RuntimeError("A(1) failed to terminate (copy schedule exhausted)")
+                self.copies.append(max(self.copies[-1], 1))
+            if phase >= self.phase_hist.shape[0]:
+                self.phase_hist = np.pad(self.phase_hist, (0, self.phase_hist.shape[0]))
             c = max(self.copies[phase], 1)
             idx = np.flatnonzero(remaining)
             msg_of_copy = np.repeat(idx, c)
             copy_inst_inv = inst_inv[msg_of_copy]
             # balanced-random relay assignment inside each clique: random rank
             # within clique -> relay slot rank % m through a per-clique random
-            # permutation (surplus relays u.a.r.).
+            # permutation (surplus relays u.a.r.).  Under faults only live
+            # clique members relay (the clique stays complete among them).
             ranks = _ranks_within(copy_inst_inv, self.rng)
-            perms = np.argsort(self.rng.random((n_inst, m)), axis=1)
-            relay_local = perms[copy_inst_inv, ranks % m]
+            if self.faults is None:
+                perms = np.argsort(self.rng.random((n_inst, m)), axis=1)
+                relay_local = perms[copy_inst_inv, ranks % m]
+            else:
+                members = inst_ids[:, None] * m + np.arange(m, dtype=np.int64)[None, :]
+                alive = self.faults.node_alive(members)  # [n_inst, m]
+                live_counts = alive.sum(axis=1)
+                # >= 1 live member: the message's current holder is one
+                perms = np.argsort(
+                    self.rng.random((n_inst, m)) + np.where(alive, 0.0, 2.0), axis=1
+                )
+                relay_local = perms[copy_inst_inv, ranks % live_counts[copy_inst_inv]]
             relay = inst_ids[copy_inst_inv] * m + relay_local
+            if self.audit is not None:
+                self.audit["relay"].append(relay.copy())
             # each relay forwards one copy per destination
             fkey = relay * np.int64(n) + dest[msg_of_copy]
             forwarded = _group_first(fkey, self.rng)
@@ -223,7 +292,11 @@ class _Machine:
     # -- Step 2 of A(level): bundle hop ------------------------------------
     def hop_call(self, cur: np.ndarray, dest: np.ndarray, level: int) -> np.ndarray:
         st = self.stats[level]
-        new, rounds = bundle_hop(self.topo, cur, dest, level, self.rng)
+        new, rounds = bundle_hop(
+            self.topo, cur, dest, level, self.rng,
+            faults=self.faults,
+            audit=None if self.audit is None else self.audit["bundle"],
+        )
         st.rounds_total += float(rounds.sum())
         st.hops_total += float(cur.shape[0])
         st.max_rounds = max(st.max_rounds, int(rounds.max(initial=0)))
@@ -236,6 +309,50 @@ class _Machine:
         inst = cur // span
         _, counts = np.unique(inst, return_counts=True)
         st.max_avg_load = max(st.max_avg_load, float(counts.max(initial=0)) / span)
+
+
+# historical name of ClexMachine, kept for callers of the private API
+_Machine = ClexMachine
+
+_MAX_DETOUR_ITERS = 16
+
+
+def _sample_detours(
+    topo: CLEXTopology,
+    cur: np.ndarray,
+    tgt: np.ndarray,
+    level: int,
+    rng: np.random.Generator,
+    faults: FaultSet,
+) -> tuple[np.ndarray, np.ndarray]:
+    """For messages with no live gateway toward copy ``tgt``: pick a sibling
+    copy b' != tgt with a live gateway (the fault-tolerance detour: cross
+    into b', then retry tgt from there).  Exhaustive over the m copies, so
+    failure means the level-``level`` copy graph is disconnected."""
+    m = topo.m
+    nmsg = cur.shape[0]
+    out_t = np.full(nmsg, -1, dtype=np.int64)
+    out_g = np.zeros(nmsg, dtype=np.int64)
+    undone = np.arange(nmsg)
+    for b in rng.permutation(m):
+        if undone.size == 0:
+            break
+        can_try = tgt[undone] != b
+        sub = undone[can_try]
+        if sub.size:
+            cand = np.full(sub.shape[0], b, dtype=np.int64)
+            gw, stuck = sample_gateways_faulty(topo, cur[sub], cand, level, rng, faults)
+            ok = ~stuck
+            out_t[sub[ok]] = b
+            out_g[sub[ok]] = gw[ok]
+            undone = np.concatenate([undone[~can_try], sub[stuck]])
+        else:
+            undone = undone[~can_try]
+    if (out_t < 0).any():
+        raise UnroutableError(
+            f"level-{level} copy unreachable: faults disconnect the copy graph"
+        )
+    return out_t, out_g
 
 
 def _ranks_within(keys: np.ndarray, rng: np.random.Generator) -> np.ndarray:
@@ -264,6 +381,8 @@ def simulate_point_to_point(
     src: np.ndarray | None = None,
     dst: np.ndarray | None = None,
     valiant_level: int | None = None,
+    faults: FaultSet | None = None,
+    audit: bool = False,
 ) -> SimulationResult:
     """Run A(1/s) on C(s, 1/s) under the paper's uniform permutation traffic.
 
@@ -276,12 +395,27 @@ def simulate_point_to_point(
     "lightweight" variant inside the level-``valiant_level`` copy of its
     source — then to its true destination.  Doubles hop cost at most; under
     adversarial (skewed) traffic it restores the uniform load bounds.
+
+    ``faults`` injects dead nodes / dead bundle edges: messages whose source
+    or destination is dead are dropped (``n_dropped_dead``); every remaining
+    live-pair message is guaranteed delivered — the machine reroutes over
+    surviving parallel edges, live relays, live gateways, and (when a direct
+    gateway to the destination copy is gone) detours through sibling copies,
+    counting each in ``LevelStats.detours``.  An :class:`UnroutableError`
+    signals true disconnection.  ``audit=True`` attaches a traversal trace
+    (every bundle edge crossed, every relay used) to the result for
+    invariant checks; leave it off for large runs.
     """
     rng = np.random.default_rng(seed)
     if src is None or dst is None:
         src, dst = uniform_permutation_traffic(topo, msgs_per_node, rng)
+    n_dropped = 0
+    if faults is not None:
+        live = faults.node_alive(src) & faults.node_alive(dst)
+        n_dropped = int((~live).sum())
+        src, dst = src[live], dst[live]
     t0 = time.time()
-    machine = _Machine(topo, mode, rng)
+    machine = ClexMachine(topo, mode, rng, faults=faults, audit=audit)
     nmsg = src.shape[0]
     for st in machine.stats.values():
         st.n_messages = nmsg
@@ -290,9 +424,38 @@ def simulate_point_to_point(
         machine.record_load(cur, level) if level > 1 else None
         if level == 1:
             return machine.lb_call(cur, dest)
-        gw = sample_gateways(topo, cur, dest, level, rng)
-        cur = run(level - 1, cur, gw)
-        cur = machine.hop_call(cur, dest, level)
+        if faults is None:
+            gw = sample_gateways(topo, cur, dest, level, rng)
+            cur = run(level - 1, cur, gw)
+            cur = machine.hop_call(cur, dest, level)
+            return run(level - 1, cur, dest)
+        # fault-aware: every message crosses the level once (as in the
+        # paper's algorithm); messages whose direct gateway is unreachable
+        # detour through a sibling copy and retry, so stragglers may take
+        # extra crossings.  Only the stragglers re-enter the recursion.
+        cur = cur.copy()
+        crossed = np.zeros(cur.shape[0], dtype=bool)
+        for _ in range(_MAX_DETOUR_ITERS):
+            if crossed.all():
+                break
+            idx = np.flatnonzero(~crossed)
+            sub_cur, sub_dest = cur[idx], dest[idx]
+            tgt = digit(sub_dest, level - 1, topo.m)
+            gw, stuck = sample_gateways_faulty(topo, sub_cur, tgt, level, rng, faults)
+            if stuck.any():
+                det_t, det_g = _sample_detours(
+                    topo, sub_cur[stuck], tgt[stuck], level, rng, faults
+                )
+                tgt[stuck], gw[stuck] = det_t, det_g
+                machine.stats[level].detours += int(stuck.sum())
+            sub_cur = run(level - 1, sub_cur, gw)
+            synth_dest = with_digit(sub_cur, level - 1, topo.m, tgt)
+            cur[idx] = machine.hop_call(sub_cur, synth_dest, level)
+            crossed[idx] = ~stuck
+        if not crossed.all():
+            raise UnroutableError(
+                f"level-{level} crossings did not converge in {_MAX_DETOUR_ITERS} detour iterations"
+            )
         return run(level - 1, cur, dest)
 
     cur = src.copy()
@@ -300,11 +463,13 @@ def simulate_point_to_point(
         from .routing import valiant_intermediate
 
         within = None if valiant_level >= topo.L else valiant_level
-        mid = valiant_intermediate(topo, src, rng, within_level=within)
+        mid = valiant_intermediate(topo, src, rng, within_level=within, faults=faults)
         cur = run(topo.L, cur, mid)
     final = run(topo.L, cur, dst)
     if not np.array_equal(final, dst):
         raise AssertionError("routing failed: some messages not delivered to their destination")
+    if machine.audit is not None:
+        machine.audit["positions"].append(final.copy())
     return SimulationResult(
         topo=topo,
         mode=mode,
@@ -312,4 +477,8 @@ def simulate_point_to_point(
         levels=machine.stats,
         lb_phase_histogram=machine.phase_hist,
         wall_seconds=time.time() - t0,
+        n_messages=nmsg,
+        n_dropped_dead=n_dropped,
+        fault_summary=faults.describe() if faults is not None else None,
+        audit=machine.audit,
     )

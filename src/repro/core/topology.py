@@ -33,6 +33,7 @@ import numpy as np
 
 __all__ = [
     "CLEXTopology",
+    "FaultSet",
     "TorusTopology",
     "digit",
     "with_digit",
@@ -172,6 +173,129 @@ class CLEXTopology:
         import networkx as nx
 
         return nx.from_numpy_array(self.build_adjacency())
+
+
+class FaultSet:
+    """Injected faults on a :class:`CLEXTopology`: dead nodes and dead
+    directed bundle edges (levels >= 2).
+
+    The paper claims inherent fault-tolerance from the m parallel edges of
+    every bundle plus the freedom to reroute through sibling copies.  This
+    class is the ground truth the fault-aware simulator routes around:
+
+    * ``dead_nodes`` — sorted unique node ids that neither originate,
+      relay, nor receive messages;
+    * ``dead_edges[level]`` — sorted unique keys ``node * m + edge_index``
+      of dead directed level-``level`` bundle edges (``edge_index`` is the
+      parallel-edge slot 0..m-1 of that node's level bundle).
+
+    Clique (level-1) links are only lost implicitly through dead endpoints:
+    cliques are complete, so a live source always reaches a live local
+    destination directly.  Everything stays pure digit arithmetic — the
+    graph is never materialised.
+    """
+
+    def __init__(
+        self,
+        topo: CLEXTopology,
+        dead_nodes=(),
+        dead_edges: "dict[int, np.ndarray] | None" = None,
+    ):
+        self.topo = topo
+        self.dead_nodes = np.unique(np.asarray(list(dead_nodes), dtype=np.int64))
+        if (self.dead_nodes < 0).any() or (self.dead_nodes >= topo.n).any():
+            raise ValueError("dead node id out of range")
+        self.dead_edges = {}
+        for level, keys in (dead_edges or {}).items():
+            if not 2 <= level <= topo.L:
+                raise ValueError(f"bundle level must be in 2..{topo.L}")
+            keys = np.unique(np.asarray(keys, dtype=np.int64))
+            if keys.size:
+                if (keys < 0).any() or (keys >= topo.n * topo.m).any():
+                    raise ValueError("dead edge key out of range")
+                self.dead_edges[level] = keys
+
+    @classmethod
+    def sample(
+        cls,
+        topo: CLEXTopology,
+        node_rate: float = 0.0,
+        edge_rate: float = 0.0,
+        rng: "np.random.Generator | None" = None,
+        protect=(),
+    ) -> "FaultSet":
+        """Sample u.a.r. faults: ``node_rate`` of nodes die, ``edge_rate`` of
+        each level's directed bundle edges die.  ``protect`` nodes never die
+        (e.g. to keep a designated source alive in tests)."""
+        rng = rng or np.random.default_rng(0)
+        n, m = topo.n, topo.m
+        protect = np.asarray(list(protect), dtype=np.int64)
+        n_dead = int(round(node_rate * n))
+        candidates = np.setdiff1d(np.arange(n, dtype=np.int64), protect)
+        n_dead = min(n_dead, candidates.shape[0])
+        dead_nodes = rng.choice(candidates, size=n_dead, replace=False) if n_dead else ()
+        dead_edges = {}
+        for level in range(2, topo.L + 1):
+            k = int(round(edge_rate * n * m))
+            if k:
+                dead_edges[level] = rng.choice(n * m, size=k, replace=False).astype(np.int64)
+        return cls(topo, dead_nodes, dead_edges)
+
+    @property
+    def n_dead_nodes(self) -> int:
+        return int(self.dead_nodes.shape[0])
+
+    @property
+    def n_dead_edges(self) -> int:
+        return int(sum(v.shape[0] for v in self.dead_edges.values()))
+
+    def describe(self) -> dict:
+        return {
+            "dead_nodes": self.n_dead_nodes,
+            "dead_edges": self.n_dead_edges,
+            "node_rate": round(self.n_dead_nodes / self.topo.n, 4),
+        }
+
+    def node_alive(self, x) -> "np.ndarray":
+        """Boolean liveness of node ids ``x`` (vectorised)."""
+        return ~np.isin(np.asarray(x, dtype=np.int64), self.dead_nodes)
+
+    def live_nodes(self) -> "np.ndarray":
+        return np.setdiff1d(np.arange(self.topo.n, dtype=np.int64), self.dead_nodes)
+
+    def edge_alive(self, level: int, node, edge_index) -> "np.ndarray":
+        """Liveness of the directed level-``level`` bundle edge(s)
+        ``(node, edge_index)`` — the edge itself, not its endpoints."""
+        dead = self.dead_edges.get(level)
+        key = np.asarray(node, dtype=np.int64) * self.topo.m + np.asarray(edge_index)
+        if dead is None:
+            return np.ones_like(key, dtype=bool)
+        return ~np.isin(key, dead)
+
+    def bundle_targets(self, nodes: "np.ndarray", level: int) -> "np.ndarray":
+        """[k, m] node ids reached by each node's level-``level`` bundle
+        (edge j lands on the node whose digit ``level-2`` is set by j)."""
+        m = self.topo.m
+        nodes = np.asarray(nodes, dtype=np.int64)
+        low_span = m ** (level - 2)
+        lows = nodes % low_span
+        b = digit(nodes, level - 2, m)
+        base = copy_index(nodes, level, m) * m**level + b * m ** (level - 1)
+        j = np.arange(m, dtype=np.int64)
+        return base[:, None] + j[None, :] * low_span + lows[:, None]
+
+    def live_edge_mask(self, nodes: "np.ndarray", level: int) -> "np.ndarray":
+        """[k, m] mask of usable bundle edges: the directed edge is alive AND
+        its target node is alive."""
+        nodes = np.asarray(nodes, dtype=np.int64)
+        targets = self.bundle_targets(nodes, level)
+        alive = self.node_alive(targets)
+        dead = self.dead_edges.get(level)
+        if dead is not None:
+            j = np.arange(self.topo.m, dtype=np.int64)
+            keys = nodes[:, None] * self.topo.m + j[None, :]
+            alive &= ~np.isin(keys, dead)
+        return alive
 
 
 @dataclasses.dataclass(frozen=True)

@@ -49,15 +49,27 @@ def _ring_step(cur: np.ndarray, dst: np.ndarray, k: int) -> np.ndarray:
 
 
 def simulate_torus_dor(
-    topo: TorusTopology, msgs_per_node: int, seed: int = 0, max_rounds: int = 100000
+    topo: TorusTopology,
+    msgs_per_node: int,
+    seed: int = 0,
+    max_rounds: int = 100000,
+    src: np.ndarray | None = None,
+    dst: np.ndarray | None = None,
 ) -> TorusSimResult:
     """Synchronous DOR with unit-capacity links: per round, each directed
-    link forwards one message (u.a.r. among contenders); losers wait."""
+    link forwards one message (u.a.r. among contenders); losers wait.
+
+    ``src``/``dst`` override the default uniform-permutation traffic so the
+    baseline can be driven through the same :mod:`scenarios` the CLEX
+    simulator runs (hotspot, transpose, same-copy, bursty, ...)."""
     rng = np.random.default_rng(seed)
     n = topo.n
-    src = np.repeat(np.arange(n, dtype=np.int64), msgs_per_node)
-    dst = src.copy()
-    rng.shuffle(dst)
+    if src is None or dst is None:
+        src = np.repeat(np.arange(n, dtype=np.int64), msgs_per_node)
+        dst = src.copy()
+        rng.shuffle(dst)
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
 
     ks = (topo.k1, topo.k2, topo.k3)
     cx, cy, cz = topo.node_xyz(src)

@@ -1,0 +1,185 @@
+"""Property-based invariants of fault injection and rerouting (ISSUE 2):
+
+* every non-faulty (live-pair) message is delivered under <= f injected
+  faults — the simulator returns normally and asserts final == dst;
+* reroutes never traverse a dead node or a dead bundle edge (checked
+  against the audit trace of every crossing and every clique relay);
+* the unrolled schedule stays deadlock-free: in the synchronous model no
+  round ever blocks on a busy link — each (gateway, edge) pair carries at
+  most one message per bundle round, and each clique (relay, destination)
+  link forwards at most one copy per phase.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    CLEXTopology,
+    FaultSet,
+    UnroutableError,
+    sample_gateways_faulty,
+    simulate_point_to_point,
+)
+from repro.core.topology import copy_index, digit
+
+
+def _sampled_faults(topo, seed, node_rate=0.05, edge_rate=0.05):
+    rng = np.random.default_rng(seed)
+    return FaultSet.sample(topo, node_rate=node_rate, edge_rate=edge_rate, rng=rng)
+
+
+# ------------------------------------------------------------- FaultSet unit
+def test_faultset_sampling_counts_and_liveness():
+    topo = CLEXTopology(8, 3)
+    f = _sampled_faults(topo, 0, node_rate=0.05, edge_rate=0.02)
+    assert f.n_dead_nodes == round(0.05 * topo.n)
+    assert not f.node_alive(f.dead_nodes).any()
+    assert f.node_alive(f.live_nodes()).all()
+    assert f.live_nodes().shape[0] + f.n_dead_nodes == topo.n
+
+
+def test_bundle_targets_match_explicit_adjacency():
+    """The digit-arithmetic bundle targets agree with the explicitly built
+    out-edge matrix on a small instance."""
+    topo = CLEXTopology(3, 3)
+    f = FaultSet(topo)
+    out = topo.build_out_edges()
+    for level in range(2, topo.L + 1):
+        targets = f.bundle_targets(np.arange(topo.n), level)
+        for x in range(topo.n):
+            for y in targets[x]:
+                assert out[x, y] >= 1
+
+
+def test_live_edge_mask_excludes_dead_edge_and_dead_target():
+    topo = CLEXTopology(4, 2)
+    f = FaultSet(topo, dead_nodes=[5], dead_edges={2: [0 * 4 + 1]})
+    mask = f.live_edge_mask(np.array([0]), 2)
+    assert not mask[0, 1]  # the dead directed edge
+    targets = f.bundle_targets(np.array([0]), 2)
+    dead_slots = np.flatnonzero(targets[0] == 5)
+    for j in dead_slots:
+        assert not mask[0, j]  # edges into the dead node
+
+
+def test_protect_keeps_nodes_alive():
+    topo = CLEXTopology(4, 2)
+    rng = np.random.default_rng(0)
+    f = FaultSet.sample(topo, node_rate=0.5, rng=rng, protect=[0, 1])
+    assert f.node_alive([0, 1]).all()
+
+
+# -------------------------------------------------- delivery under <= f faults
+@given(seed=st.integers(0, 1000), mode=st.sampled_from(["dense", "light"]))
+@settings(max_examples=10, deadline=None)
+def test_all_live_pairs_delivered_under_faults(seed, mode):
+    """<= 5% dead nodes + 5% dead bundle edges: every live-pair message is
+    delivered (the simulator raises otherwise), none are silently lost."""
+    topo = CLEXTopology(8, 3)
+    faults = _sampled_faults(topo, seed)
+    res = simulate_point_to_point(topo, 2, mode=mode, seed=seed, faults=faults)
+    assert res.delivered_fraction == 1.0
+    assert res.n_messages + res.n_dropped_dead == topo.n * 2
+    # degraded, not broken: hop counts grow only through counted detours
+    assert res.levels[topo.L].hops_total >= res.n_messages
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=5, deadline=None)
+def test_delivery_with_valiant_under_faults(seed):
+    topo = CLEXTopology(4, 3)
+    faults = _sampled_faults(topo, seed)
+    res = simulate_point_to_point(
+        topo, 2, mode="light", seed=seed, faults=faults, valiant_level=topo.L
+    )
+    assert res.delivered_fraction == 1.0
+
+
+# -------------------------------------- reroutes avoid dead nodes / dead edges
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_reroutes_never_traverse_dead_nodes_or_edges(seed):
+    topo = CLEXTopology(8, 2)
+    faults = _sampled_faults(topo, seed, node_rate=0.1, edge_rate=0.1)
+    res = simulate_point_to_point(
+        topo, 2, mode="dense", seed=seed, faults=faults, audit=True
+    )
+    assert res.audit is not None and res.audit["bundle"]
+    for rec in res.audit["bundle"]:
+        level = rec["level"]
+        # crossing endpoints are live
+        assert faults.node_alive(rec["node"]).all()
+        assert faults.node_alive(rec["target"]).all()
+        # the directed edge used is not a dead edge
+        assert faults.edge_alive(level, rec["node"], rec["edge"]).all()
+    for relays in res.audit["relay"]:
+        assert faults.node_alive(relays).all()
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_faulty_gateways_are_live_and_usable(seed):
+    topo = CLEXTopology(8, 3)
+    faults = _sampled_faults(topo, seed, node_rate=0.2, edge_rate=0.2)
+    rng = np.random.default_rng(seed)
+    cur = rng.choice(faults.live_nodes(), size=200)
+    tgt = rng.integers(0, topo.m, size=200, dtype=np.int64)
+    level = 3
+    gw, stuck = sample_gateways_faulty(topo, cur, tgt, level, rng, faults)
+    ok = ~stuck
+    assert faults.node_alive(gw[ok]).all()
+    assert faults.live_edge_mask(gw[ok], level).any(axis=1).all()
+    # gateways stay in cur's level-(l-1) copy and point at the target copy
+    m = topo.m
+    assert (copy_index(gw[ok], level - 1, m) == copy_index(cur[ok], level - 1, m)).all()
+    assert (digit(gw[ok], level - 2, m) == tgt[ok]).all()
+    # stuck is exact: no live candidate exists for those messages
+    for i in np.flatnonzero(stuck):
+        span = m ** (level - 2)
+        base = copy_index(cur[i : i + 1], level - 1, m)[0] * m ** (level - 1)
+        cand = base + tgt[i] * span + np.arange(span)
+        live = faults.node_alive(cand) & faults.live_edge_mask(cand, level).any(axis=1)
+        assert not live.any()
+
+
+# --------------------------------------------------------- deadlock-freedom
+@given(seed=st.integers(0, 1000), mode=st.sampled_from(["dense", "light"]))
+@settings(max_examples=6, deadline=None)
+def test_synchronous_schedule_is_deadlock_free(seed, mode):
+    """No round blocks on a busy link: within each bundle crossing, a
+    (gateway, edge) pair carries at most one message per round — ranks are
+    spread round-robin over the live edges, so round r uses each edge at
+    most once."""
+    topo = CLEXTopology(4, 3)
+    faults = _sampled_faults(topo, seed, node_rate=0.08, edge_rate=0.08)
+    res = simulate_point_to_point(
+        topo, 2, mode=mode, seed=seed, faults=faults, audit=True
+    )
+    for rec in res.audit["bundle"]:
+        key = (rec["node"] * np.int64(topo.m) + rec["edge"]) * np.int64(10**6) + rec["round"]
+        _, counts = np.unique(key, return_counts=True)
+        assert counts.max() == 1
+    assert res.delivered_fraction == 1.0
+
+
+def test_unroutable_raises_cleanly():
+    """Disconnect one clique's every path to its sibling (L=2, all gateways
+    of one target dead): the simulator must raise, not deliver silently."""
+    topo = CLEXTopology(2, 2)  # n=4: cliques {0,1}, {2,3}
+    # kill node 1 (clique 0's only gateway to copy 1 is node with digit0=1)
+    faults = FaultSet(topo, dead_nodes=[1], dead_edges={2: [0 * 2 + 0, 0 * 2 + 1]})
+    src = np.array([0], dtype=np.int64)
+    dst = np.array([2], dtype=np.int64)
+    with pytest.raises(UnroutableError):
+        simulate_point_to_point(topo, 1, mode="dense", seed=0, src=src, dst=dst,
+                                faults=faults)
+
+
+def test_fault_free_faultset_matches_no_faults_qualitatively():
+    """An empty FaultSet routes every message with the same hop structure as
+    the fault-free path (levels >= 2 cross exactly once per message)."""
+    topo = CLEXTopology(8, 2)
+    res = simulate_point_to_point(topo, 3, mode="dense", seed=0, faults=FaultSet(topo))
+    assert res.total_detours == 0
+    assert res.levels[2].avg_hops == pytest.approx(1.0)

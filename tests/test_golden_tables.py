@@ -1,0 +1,57 @@
+"""Golden regression: frozen small-instance `simulate_point_to_point` stats
+tables (the Tables I-IV shape from ``LevelStats.row()``).
+
+These values pin the *exact* behaviour of the simulator — RNG stream
+consumption order included — on the pinned numpy.  A legitimate algorithm
+change must regenerate them consciously (see the command in the comment);
+anything else that shifts them is silent drift of the paper numbers.
+
+Regenerate with:
+
+    PYTHONPATH=src python -c "
+    from repro.core import CLEXTopology, simulate_point_to_point
+    for (m, L, mode, seed, msgs) in [(4,2,'dense',0,3), (8,2,'light',1,2),
+                                     (4,3,'dense',2,2), (8,3,'light',3,2)]:
+        r = simulate_point_to_point(CLEXTopology(m, L), msgs, mode=mode, seed=seed)
+        print((m, L, mode, seed, msgs), r.table())"
+"""
+
+import pytest
+
+from repro.core import CLEXTopology, simulate_point_to_point
+
+GOLDEN = {
+    (4, 2, "dense", 0, 3): [
+        {"lvl": 1, "max_rds": 3, "avg_rds": 2.15, "max_avg_load": 3.75, "avg_hops": 1.83},
+        {"lvl": 2, "max_rds": 2, "avg_rds": 1.06, "max_avg_load": 3.0, "avg_hops": 1.0},
+    ],
+    (8, 2, "light", 1, 2): [
+        {"lvl": 1, "max_rds": 3, "avg_rds": 1.93, "max_avg_load": 2.38, "avg_hops": 1.83},
+        {"lvl": 2, "max_rds": 1, "avg_rds": 1.0, "max_avg_load": 2.0, "avg_hops": 1.0},
+    ],
+    (4, 3, "dense", 2, 2): [
+        {"lvl": 1, "max_rds": 3, "avg_rds": 3.89, "max_avg_load": 3.75, "avg_hops": 3.47},
+        {"lvl": 2, "max_rds": 2, "avg_rds": 2.02, "max_avg_load": 2.0, "avg_hops": 2.0},
+        {"lvl": 3, "max_rds": 2, "avg_rds": 1.05, "max_avg_load": 2.0, "avg_hops": 1.0},
+    ],
+    (8, 3, "light", 3, 2): [
+        {"lvl": 1, "max_rds": 3, "avg_rds": 3.98, "max_avg_load": 3.5, "avg_hops": 3.72},
+        {"lvl": 2, "max_rds": 1, "avg_rds": 2.0, "max_avg_load": 2.0, "avg_hops": 2.0},
+        {"lvl": 3, "max_rds": 1, "avg_rds": 1.0, "max_avg_load": 2.0, "avg_hops": 1.0},
+    ],
+}
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN), ids=lambda k: f"m{k[0]}L{k[1]}{k[2]}s{k[3]}")
+def test_small_instance_tables_frozen(key):
+    m, L, mode, seed, msgs = key
+    res = simulate_point_to_point(CLEXTopology(m, L), msgs, mode=mode, seed=seed)
+    assert res.table() == GOLDEN[key]
+
+
+def test_row_schema_frozen():
+    """The Tables I-IV row shape itself is part of the contract: benchmark
+    artifacts and EXPERIMENTS.md parse these keys."""
+    res = simulate_point_to_point(CLEXTopology(4, 2), 1, mode="dense", seed=0)
+    for row in res.table():
+        assert list(row) == ["lvl", "max_rds", "avg_rds", "max_avg_load", "avg_hops"]

@@ -1,0 +1,172 @@
+"""Scenario engine + all-to-all flooding + degradation curve (ISSUE 2
+tentpole), including the acceptance criteria:
+
+* fault-injection on C(s, 1/s) with up to 5% dead nodes delivers 100% of
+  live-pair messages and emits a degradation curve;
+* the simulated asymmetric-bandwidth all-to-all lands within 1.2x of the
+  `analysis.all_to_all_comparison` bound on test instances.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    CLEXTopology,
+    SCENARIOS,
+    TorusTopology,
+    all_to_all_comparison,
+    fault_degradation_curve,
+    make_traffic,
+    run_clex_scenario,
+    run_torus_scenario,
+    scenario_matrix,
+    simulate_all_to_all,
+)
+from repro.core.scenarios import asymmetric_bandwidth
+from repro.core.topology import copy_index, digit
+
+
+CLEX = CLEXTopology(8, 2)
+TORUS = TorusTopology.cube(4)
+
+
+# ------------------------------------------------------------- generators
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+@pytest.mark.parametrize("topo", [CLEX, TORUS], ids=["clex", "torus"])
+def test_generators_produce_valid_traffic(name, topo):
+    src, dst = make_traffic(topo, name, 3, rng=0)
+    assert src.dtype == np.int64 and dst.dtype == np.int64
+    assert src.shape == dst.shape and src.shape[0] > 0
+    for arr in (src, dst):
+        assert (arr >= 0).all() and (arr < topo.n).all()
+
+
+def test_uniform_is_balanced_permutation():
+    src, dst = make_traffic(CLEX, "uniform", 5, rng=0)
+    assert (np.bincount(src, minlength=CLEX.n) == 5).all()
+    assert (np.bincount(dst, minlength=CLEX.n) == 5).all()
+
+
+def test_hotspot_concentrates_traffic():
+    src, dst = make_traffic(CLEX, "hotspot", 8, rng=0)
+    counts = np.bincount(dst, minlength=CLEX.n)
+    # the hot set (>= 1 node here) receives far more than a fair share
+    assert counts.max() > 5 * 8
+
+
+def test_transpose_is_digit_reversal_permutation():
+    src, dst = make_traffic(CLEX, "transpose", 1, rng=0)
+    assert np.array_equal(np.sort(dst), np.arange(CLEX.n))  # a permutation
+    m, L = CLEX.m, CLEX.L
+    for p in range(L):
+        assert (digit(dst, p, m) == digit(src, L - 1 - p, m)).all()
+
+
+def test_transpose_torus_is_coordinate_rotation():
+    src, dst = make_traffic(TORUS, "transpose", 1, rng=0)
+    assert np.array_equal(np.sort(dst), np.arange(TORUS.n))
+    sx, sy, sz = TORUS.node_xyz(src)
+    dx, dy, dz = TORUS.node_xyz(dst)
+    assert (dx == sy).all() and (dy == sz).all() and (dz == sx).all()
+
+
+def test_same_copy_targets_single_copy():
+    src, dst = make_traffic(CLEX, "same_copy", 4, rng=0)
+    assert (copy_index(dst, CLEX.L - 1, CLEX.m) == 0).all()
+
+
+def test_bursty_concentrates_senders():
+    src, dst = make_traffic(CLEX, "bursty", 4, rng=0)
+    senders = np.unique(src)
+    assert senders.shape[0] == max(1, CLEX.n // 8)
+    assert (np.bincount(src, minlength=CLEX.n)[senders] == 16).all()
+
+
+# ------------------------------------------------------------------ engine
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_clex_and_torus_run_every_scenario(name):
+    res = run_clex_scenario(CLEX, name, msgs_per_node=2, mode="dense", seed=0,
+                            valiant=False)
+    assert res.delivered_fraction == 1.0
+    tor = run_torus_scenario(TORUS, name, msgs_per_node=2, seed=0)
+    assert tor.avg_rounds >= tor.avg_hops >= 0
+
+
+def test_valiant_toggle_per_scenario():
+    """valiant='auto' resolves the scenario default; False disables; the
+    randomized run pays extra hops (the Valiant 2x) on skewed traffic."""
+    plain = run_clex_scenario(CLEX, "same_copy", 3, seed=0, valiant=False)
+    auto = run_clex_scenario(CLEX, "same_copy", 3, seed=0, valiant="auto")
+    assert SCENARIOS["same_copy"].valiant_level == "global"
+    assert auto.sum_avg_hops > plain.sum_avg_hops  # randomization is on
+    uniform = run_clex_scenario(CLEX, "uniform", 3, seed=0, valiant="auto")
+    assert SCENARIOS["uniform"].valiant_level is None
+    assert uniform.sum_avg_hops < auto.sum_avg_hops  # and off for uniform
+
+
+def test_scenario_matrix_rows_complete():
+    rows = scenario_matrix(CLEX, TORUS, msgs_per_node=2, seed=0)
+    assert {r["scenario"] for r in rows} == set(SCENARIOS)
+    for r in rows:
+        assert {"clex_sum_avg_rds", "torus_avg_rds", "rounds_gain_vs_torus"} <= set(r)
+        if SCENARIOS[r["scenario"]].valiant_level is not None:
+            assert "clex_valiant_sum_avg_rds" in r
+
+
+# ------------------------------------------------- all-to-all vs the bound
+@pytest.mark.parametrize("m,L", [(4, 2), (8, 2), (4, 3)])
+def test_all_to_all_within_bound(m, L):
+    """Acceptance: simulated asymmetric-bandwidth all-to-all within 1.2x of
+    the analytic bound, per-message hops <= L, per-edge load exactly n/m."""
+    topo = CLEXTopology(m, L)
+    bw = asymmetric_bandwidth(topo)
+    res = simulate_all_to_all(topo, bandwidth=bw)
+    comp = all_to_all_comparison(topo, bw)
+    assert res.bound_rounds == comp["rounds_bound"]
+    assert res.rounds_vs_bound <= 1.2
+    assert res.max_hops <= topo.L == comp["clex_max_hops"]
+    assert res.uniform_load  # every edge carries exactly n/m messages
+    assert res.max_edge_load_per_level == {
+        level: comp["per_edge_load_bound"] for level in range(1, L + 1)
+    }
+
+
+def test_all_to_all_unit_vs_asymmetric_bandwidth():
+    """Asymmetric capacity on the short links strictly reduces total rounds
+    vs the unit assignment (the paper's asymmetric-assignment argument)."""
+    topo = CLEXTopology(8, 3)
+    unit = simulate_all_to_all(topo)
+    asym = simulate_all_to_all(topo, bandwidth=asymmetric_bandwidth(topo))
+    assert asym.total_rounds < unit.total_rounds
+    assert unit.rounds_vs_bound <= 1.2 and asym.rounds_vs_bound <= 1.2
+
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=5, deadline=None)
+def test_all_to_all_under_faults_delivers(seed):
+    topo = CLEXTopology(4, 3)
+    from repro.core import FaultSet
+
+    faults = FaultSet.sample(topo, node_rate=0.05, edge_rate=0.05,
+                             rng=np.random.default_rng(seed))
+    res = simulate_all_to_all(topo, faults=faults, seed=seed)
+    # live-pair count + dropped = all ordered pairs; broken paths patched
+    assert res.n_messages + res.n_dropped_dead == topo.n * topo.n
+    assert res.max_hops <= topo.L
+    assert res.rounds_vs_bound <= 1.2
+
+
+# ----------------------------------------------------- degradation curve
+def test_degradation_curve_acceptance():
+    """Acceptance: up to 5% dead nodes on C(s, 1/s) -> 100% of live-pair
+    messages delivered, curve rows well-formed and monotone in faults."""
+    topo = CLEXTopology(8, 3)
+    rows = fault_degradation_curve(topo, rates=(0.0, 0.01, 0.05), msgs_per_node=2)
+    assert [r["node_rate"] for r in rows] == [0.0, 0.01, 0.05]
+    for r in rows:
+        assert r["delivered_fraction"] == 1.0
+        assert r["n_messages"] + r["dropped_dead_pairs"] == topo.n * 2
+    assert rows[0]["detours"] == 0 and rows[0]["slowdown_vs_fault_free"] == 1.0
+    assert rows[-1]["dead_nodes"] == round(0.05 * topo.n)
+    assert rows[-1]["detours"] > 0  # degradation is visible, not hidden
