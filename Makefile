@@ -6,10 +6,16 @@ PYTEST ?= python -m pytest
 # a missing plugin).  70 is a floor — raise it as coverage grows.
 COVFLAGS := $(shell python -c "import pytest_cov" 2>/dev/null && echo "--cov=repro --cov-fail-under=70")
 
-.PHONY: verify test deps
+.PHONY: verify test deps linkcheck
 
-# Tier-1 gate: the full seed suite on the pinned JAX (see docs/COMPAT.md).
-verify:
+# Docs gate: no references to non-existent docs/*.md or repo-root *.md files
+# from Python docstrings or markdown (tools/check_doc_links.py).
+linkcheck:
+	python tools/check_doc_links.py
+
+# Tier-1 gate: docs link check + the full seed suite on the pinned JAX
+# (see docs/COMPAT.md).
+verify: linkcheck
 	PYTHONPATH=src $(PYTEST) -x -q $(COVFLAGS)
 
 test:

@@ -6,7 +6,9 @@
   by ``python -m benchmarks.run``).
 
 Hand-written sections (everything outside the AUTO-* markers) are kept
-intact; a skeleton EXPERIMENTS.md is created when missing.
+intact; a skeleton EXPERIMENTS.md is created when missing.  The design
+behind the reported schedules is in docs/ARCHITECTURE.md; the simulator
+knobs are in docs/SIMULATOR.md.
 """
 
 from __future__ import annotations

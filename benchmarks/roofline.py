@@ -1,5 +1,9 @@
 """Roofline report: aggregate the dry-run JSONs into the EXPERIMENTS.md
-tables (one row per arch x shape x mesh) and rank hillclimb candidates."""
+tables (one row per arch x shape x mesh) and rank hillclimb candidates.
+
+EXPERIMENTS.md is generated (``python -m benchmarks.make_report``); the
+hardware constants below and the collective schedules they price are
+documented in docs/ARCHITECTURE.md."""
 
 from __future__ import annotations
 

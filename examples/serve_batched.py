@@ -1,5 +1,6 @@
-"""Batched serving example: MoE model (OLMoE family, reduced), prefill +
-decode with greedy sampling, reporting per-phase latency.
+"""Serving example: MoE model (OLMoE family, reduced) under both engines —
+the seed's one-shot lockstep batch and the continuous-batching scheduler —
+on the same ragged workload, reporting latency and slot utilization.
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -14,25 +15,42 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models import build_model
-from repro.runtime.serving import ServingEngine
+from repro.runtime.serving import ContinuousBatchingEngine, ServingEngine
 
 cfg = get_config("olmoe-1b-7b", reduced=True)
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
-engine = ServingEngine(model, params, max_len=128)
 
 rng = np.random.default_rng(0)
-batch, prompt_len, new_tokens = 8, 64, 32
-prompts = rng.integers(1, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+n_req, slots, prompt_len, new_tokens = 8, 4, 64, 32
+lens = rng.integers(prompt_len // 2, prompt_len + 1, n_req)
+budgets = rng.integers(new_tokens // 4, new_tokens + 1, n_req)
+prompts = [rng.integers(1, cfg.vocab, (int(l),)).astype(np.int32) for l in lens]
+useful = int(sum(budgets))
 
+# ---- one-shot baseline: fixed batches, padded prompts, max budget each batch
+engine = ServingEngine(model, params, max_len=prompt_len + new_tokens + 8)
+width = max(int(l) for l in lens)
 t0 = time.time()
-out = engine.generate(prompts, new_tokens)  # includes compile
-t_first = time.time() - t0
+for i in range(0, n_req, slots):
+    batch = prompts[i : i + slots]
+    padded = np.zeros((len(batch), width), np.int32)
+    for r, p in enumerate(batch):
+        padded[r, width - p.shape[0]:] = p
+    engine.generate(padded, int(max(budgets[i : i + slots])))
+t_oneshot = time.time() - t0
+
+# ---- continuous batching: pooled KV slots, per-request completion
+cont = ContinuousBatchingEngine(
+    model, params, n_slots=slots, max_len=prompt_len + new_tokens + 8
+)
 t0 = time.time()
-out = engine.generate(prompts, new_tokens)  # steady state
-t_steady = time.time() - t0
-tok = batch * new_tokens
-print(f"arch={cfg.name} (MoE {cfg.moe.n_experts}e top-{cfg.moe.top_k}) batch={batch}")
-print(f"first call (with compile): {t_first:.2f}s; steady: {t_steady:.2f}s "
-      f"= {tok/t_steady:.0f} tok/s")
+out = cont.generate(prompts, [int(b) for b in budgets])
+t_cont = time.time() - t0
+
+print(f"arch={cfg.name} (MoE {cfg.moe.n_experts}e top-{cfg.moe.top_k}) "
+      f"{n_req} ragged requests, {slots} slots, {useful} useful tokens")
+print(f"one-shot batches: {t_oneshot:.2f}s = {useful/t_oneshot:.0f} tok/s (incl. compile)")
+print(f"continuous:       {t_cont:.2f}s = {useful/t_cont:.0f} tok/s (incl. compile), "
+      f"slot utilization {cont.metrics.slot_utilization:.2f}")
 print("sample:", out[0][:16].tolist())

@@ -35,7 +35,7 @@ class MoEConfig:
     layer_offset: int = 0
     capacity_factor: float = 1.25
     router_jitter: bool = False
-    # CLEX technique knobs (Sec. 3 of DESIGN.md)
+    # CLEX technique knobs (Sec. 3 of docs/ARCHITECTURE.md)
     hierarchical_a2a: bool = True  # two-stage all-to-all dispatch
     valiant_shuffle: bool = False  # randomized token indirection
 

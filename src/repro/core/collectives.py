@@ -1,4 +1,4 @@
-"""CLEX-inspired hierarchical collectives (DESIGN.md Sec. 3).
+"""CLEX-inspired hierarchical collectives (docs/ARCHITECTURE.md Sec. 3).
 
 A TPU multi-pod machine is a physical CLEX-like hierarchy: the innermost
 mesh axis rides short intra-pod ICI links (the paper's level-1 clique), the
@@ -259,3 +259,76 @@ class CollectiveCostModel:
             else 0.0
         )
         return stage1 + stage2
+
+    # ---------------- serving-scheduler hooks (docs/SERVING.md) ----------------
+
+    def moe_dispatch_cost(
+        self,
+        tokens: float,
+        d_model: int,
+        top_k: int,
+        n_low: int,
+        n_pods: int,
+        bytes_per_elem: float = 2.0,
+        hierarchical: bool = True,
+    ) -> float:
+        """Wall-clock seconds for one MoE dispatch (or combine) all-to-all
+        moving ``tokens`` activations of width ``d_model`` to ``top_k``
+        experts across an (n_low x n_pods) mesh.  The continuous-batching
+        scheduler prices admission with this: hierarchical=True is the CLEX
+        level-1 rule (stage traffic through the cheap inner axis)."""
+        if tokens <= 0 or top_k <= 0:
+            return 0.0
+        chips = max(n_low, 1) * max(n_pods, 1)
+        bytes_per_chip = tokens * top_k * d_model * bytes_per_elem / chips
+        fn = self.two_stage_all_to_all if hierarchical else self.flat_all_to_all
+        return fn(bytes_per_chip, n_low, n_pods)
+
+    def decode_step_a2a_cost(
+        self,
+        batch: float,
+        d_model: int,
+        top_k: int,
+        n_moe_layers: int,
+        n_low: int,
+        n_pods: int,
+        bytes_per_elem: float = 2.0,
+        hierarchical: bool = True,
+    ) -> float:
+        """All-to-all seconds for one decode step of ``batch`` co-scheduled
+        requests (one token each): dispatch + combine per MoE layer."""
+        if n_moe_layers <= 0 or batch <= 0:
+            return 0.0
+        one = self.moe_dispatch_cost(
+            batch, d_model, top_k, n_low, n_pods, bytes_per_elem, hierarchical
+        )
+        return 2.0 * n_moe_layers * one
+
+    def coschedule_gain(
+        self,
+        batch: int,
+        d_model: int,
+        top_k: int,
+        n_moe_layers: int,
+        n_low: int,
+        n_pods: int,
+        bytes_per_elem: float = 2.0,
+    ) -> float:
+        """Per-request seconds saved by batching ``batch`` MoE-heavy requests
+        into one decode step instead of ``batch`` separate steps: wire bytes
+        scale with the batch but the (n_pods - 1) bundle-hop latencies — the
+        term the CLEX delay analysis bounds — amortise across it.  The
+        scheduler co-schedules MoE-heavy requests while this gain is
+        positive."""
+        if batch <= 1 or n_moe_layers <= 0:
+            return 0.0
+        solo = self.decode_step_a2a_cost(
+            1, d_model, top_k, n_moe_layers, n_low, n_pods, bytes_per_elem
+        )
+        together = (
+            self.decode_step_a2a_cost(
+                batch, d_model, top_k, n_moe_layers, n_low, n_pods, bytes_per_elem
+            )
+            / batch
+        )
+        return solo - together

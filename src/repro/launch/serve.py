@@ -1,7 +1,16 @@
-"""Serving launcher: batched generation with prefill + decode.
+"""Serving launcher: continuous batching (default) or the one-shot baseline.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --reduced \
-      --batch 4 --prompt-len 32 --new-tokens 16
+      --requests 16 --slots 4 --prompt-len 32 --new-tokens 16
+
+  # one-shot lockstep baseline (the seed behaviour)
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --reduced \
+      --one-shot --batch 4 --prompt-len 32 --new-tokens 16
+
+Continuous mode submits a ragged closed-loop workload (prompt lengths and
+token budgets jittered around --prompt-len/--new-tokens), serves it through
+the pooled-KV scheduler, and reports tokens/s plus slot utilization.  See
+docs/SERVING.md for the scheduler/KV-pool knobs.
 """
 
 from __future__ import annotations
@@ -14,14 +23,20 @@ import numpy as np
 
 from ..configs.base import ARCH_IDS, get_config
 from ..models import build_model
-from ..runtime.serving import ServingEngine
+from ..runtime.serving import ContinuousBatchingEngine, ServingEngine
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="internlm2-1.8b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--one-shot", action="store_true",
+                    help="seed ServingEngine: one fixed batch, lockstep decode")
+    ap.add_argument("--batch", type=int, default=4, help="one-shot batch size")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="continuous mode: number of ragged requests")
+    ap.add_argument("--slots", type=int, default=4, help="KV-pool decode slots")
+    ap.add_argument("--policy", choices=["fcfs", "cost_aware"], default="cost_aware")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -30,17 +45,50 @@ def main() -> None:
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, max_len=args.prompt_len + args.new_tokens + 8)
-
     rng = np.random.default_rng(0)
-    prompts = rng.integers(1, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+
+    if args.one_shot:
+        engine = ServingEngine(model, params, max_len=args.prompt_len + args.new_tokens + 8)
+        prompts = rng.integers(1, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+        t0 = time.time()
+        out = engine.generate(prompts, args.new_tokens, temperature=args.temperature)
+        dt = time.time() - t0
+        toks = args.batch * args.new_tokens
+        print(f"generated {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. compile)")
+        for row in out[: min(args.batch, 4)]:
+            print("  ", row.tolist())
+        return
+
+    max_len = args.prompt_len + args.new_tokens + 8
+    engine = ContinuousBatchingEngine(
+        model, params, n_slots=args.slots, max_len=max_len, policy=args.policy
+    )
+    lens = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1, args.requests)
+    budgets = rng.integers(max(args.new_tokens // 4, 1), args.new_tokens + 1, args.requests)
     t0 = time.time()
-    out = engine.generate(prompts, args.new_tokens, temperature=args.temperature)
+    rids = [
+        engine.submit(
+            rng.integers(1, cfg.vocab, (int(l),)).astype(np.int32),
+            int(b),
+            temperature=args.temperature,
+        )
+        for l, b in zip(lens, budgets)
+    ]
+    out = engine.run()
     dt = time.time() - t0
-    toks = args.batch * args.new_tokens
-    print(f"generated {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. compile)")
-    for row in out[: min(args.batch, 4)]:
-        print("  ", row.tolist())
+    toks = sum(len(out[r]) for r in rids)
+    m = engine.metrics
+    print(
+        f"served {len(rids)} ragged requests / {toks} tokens in {dt:.2f}s "
+        f"({toks/dt:.1f} tok/s incl. compile)"
+    )
+    print(
+        f"slots={args.slots} policy={args.policy} decode_steps={m.decode_steps} "
+        f"prefills={m.prefills} slot_utilization={m.slot_utilization:.2f} "
+        f"pool_evictions={engine.pool.n_evict}"
+    )
+    for r in rids[:4]:
+        print("  ", out[r].tolist())
 
 
 if __name__ == "__main__":

@@ -172,6 +172,7 @@ def attention_apply(
     cache: dict | None = None,
     update_cache: bool = False,
     impl: str = "xla",
+    ragged: bool = False,
 ):
     """Returns (out [B,S,D], new_cache)."""
     compute = x.dtype
@@ -207,24 +208,37 @@ def attention_apply(
                 "pos": positions.astype(jnp.int32),
             }
     else:
-        # decode: s == 1, write into (ring) cache then attend.  The batch
-        # advances in lockstep (ServingEngine contract), so the write is one
+        # decode: s == 1, write into (ring) cache then attend.
+        #
+        # Lockstep mode (``ragged=False``, the one-shot ServingEngine
+        # contract): the batch advances together, so the write is one
         # dynamic_update_slice at a scalar slot — a scatter here gets
         # promoted to fp32 by XLA-CPU float normalization, materialising
         # fp32 copies of the whole cache.
+        #
+        # Ragged mode (continuous batching): every row sits at its own
+        # absolute position, so each row writes its own ring slot.  A
+        # per-row one-hot select keeps it a fusable select (not a scatter,
+        # which hits the same fp32-normalization trap as above).
         assert s == 1, "decode path expects a single new token"
         pos = positions[:, 0]  # [B]
         length = cache["k"].shape[1]
-        slot = (pos[0] % length).astype(jnp.int32)
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, axis=1
-        )
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, axis=1
-        )
-        cpos = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], pos[:, None].astype(jnp.int32), slot, axis=1
-        )
+        if ragged:
+            hit = (pos[:, None] % length) == jnp.arange(length)[None]  # [B, L]
+            ck = jnp.where(hit[:, :, None, None], k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(hit[:, :, None, None], v.astype(cache["v"].dtype), cache["v"])
+            cpos = jnp.where(hit, pos[:, None].astype(jnp.int32), cache["pos"])
+        else:
+            slot = (pos[0] % length).astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1
+            )
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1
+            )
+            cpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], pos[:, None].astype(jnp.int32), slot, axis=1
+            )
         delta = pos[:, None] - cpos  # [B, L]
         valid = (cpos >= 0) & (delta >= 0)
         if window > 0:
@@ -311,6 +325,7 @@ def mla_apply(
     cache: dict | None = None,
     update_cache: bool = False,
     impl: str = "xla",
+    ragged: bool = False,
 ):
     m = cfg.mla
     compute = x.dtype
@@ -334,16 +349,25 @@ def mla_apply(
         assert s == 1
         pos = positions[:, 0]
         length = cache["ckv"].shape[1]
-        slot = (pos[0] % length).astype(jnp.int32)
-        cckv = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), slot, axis=1
-        )
-        ckrope = jax.lax.dynamic_update_slice_in_dim(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), slot, axis=1
-        )
-        cpos = jax.lax.dynamic_update_slice_in_dim(
-            cache["pos"], pos[:, None].astype(jnp.int32), slot, axis=1
-        )
+        if ragged:
+            # per-row ring slot (continuous batching) — see attention_apply
+            hit = (pos[:, None] % length) == jnp.arange(length)[None]  # [B, L]
+            cckv = jnp.where(hit[:, :, None], ckv.astype(cache["ckv"].dtype), cache["ckv"])
+            ckrope = jnp.where(
+                hit[:, :, None], k_rope.astype(cache["k_rope"].dtype), cache["k_rope"]
+            )
+            cpos = jnp.where(hit, pos[:, None].astype(jnp.int32), cache["pos"])
+        else:
+            slot = (pos[0] % length).astype(jnp.int32)
+            cckv = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), slot, axis=1
+            )
+            ckrope = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), slot, axis=1
+            )
+            cpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], pos[:, None].astype(jnp.int32), slot, axis=1
+            )
         w_uk = params["w_uk"].astype(compute).reshape(m.kv_lora_rank, nh, m.qk_nope_head_dim)
         q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)  # [B,1,H,rank]
         scores = jnp.einsum(

@@ -157,8 +157,16 @@ class Model:
             dtype=jnp.dtype(cfg.compute_dtype),
         )
 
-    def prefill(self, params, batch, impl: str = "xla", mesh=None):
-        """Full forward over the prompt; returns (last_logits, caches)."""
+    def prefill(self, params, batch, impl: str = "xla", mesh=None, last_pos=None):
+        """Full forward over the prompt; returns (last_logits, caches).
+
+        ``last_pos`` ([B] int32, optional) selects the per-row position whose
+        logits are returned — the last *real* prompt token when prompts are
+        right-padded to a bucket length (continuous-batching prefill).  Causal
+        attention guarantees right padding cannot leak into those logits; pair
+        with :meth:`mask_prompt_cache` so the pad entries never enter decode.
+        Default (``None``) keeps the seed behaviour: logits at position -1.
+        """
         cfg = self.cfg
         compute = jnp.dtype(cfg.compute_dtype)
         if cfg.enc_dec:
@@ -180,8 +188,35 @@ class Model:
                 params["decoder"], x, cfg, positions=positions, update_cache=True, impl=impl,
                 mesh=mesh,
             )
-        logits = self._logits(params, x[:, -1:], compute)
+        if last_pos is None:
+            x_last = x[:, -1:]
+        else:
+            idx = jnp.asarray(last_pos, jnp.int32).reshape(-1)  # [B]
+            x_last = x[jnp.arange(x.shape[0]), idx][:, None]
+        logits = self._logits(params, x_last, compute)
         return logits, new_caches
+
+    def mask_prompt_cache(self, caches, true_len):
+        """Invalidate cache entries written by right-pad positions >= ``true_len``
+        (scalar or [B]) so ``prepare_decode_caches`` drops them and decode never
+        attends to padding.  Only attention/MLA caches carry ``pos``; SSM state
+        has no positional record — SSM/hybrid configs must prefill at the exact
+        prompt length instead (the serving engine enforces this)."""
+        true_len = jnp.asarray(true_len, jnp.int32)
+        # pos leaves are [..., B, S]; a per-row [B] bound broadcasts as [B, 1]
+        bound = true_len[:, None] if true_len.ndim == 1 else true_len
+
+        def fix(entry):
+            m = entry.get("mixer")
+            if isinstance(m, dict) and "pos" in m:
+                keep = m["pos"] < bound  # pos == arange(S) at prefill
+                m = dict(m)
+                m["pos"] = jnp.where(keep, m["pos"], -1)
+                entry = dict(entry)
+                entry["mixer"] = m
+            return entry
+
+        return tuple(fix(dict(e)) for e in caches)
 
     def prepare_decode_caches(self, caches, capacity: int):
         """Re-lay prefill caches into decode (ring) buffers with headroom.
@@ -225,8 +260,14 @@ class Model:
 
         return tuple(relay_block(bc) for bc in caches)
 
-    def decode_step(self, params, caches, tokens, pos, impl: str = "xla", mesh=None):
+    def decode_step(self, params, caches, tokens, pos, impl: str = "xla", mesh=None,
+                    ragged: bool = False):
         """One token per sequence.  tokens [B, 1]; pos [B] absolute position.
+
+        ``ragged=False`` (seed behaviour) assumes the batch advances in
+        lockstep — all rows share one ring slot per step.  ``ragged=True`` is
+        the continuous-batching contract: each row is an independent request
+        at its own position, writing its own (slot-indexed) cache row.
 
         Returns (logits [B, 1, V], new_caches).
         """
@@ -235,7 +276,8 @@ class Model:
         x = params["embed"].astype(compute)[tokens]
         positions = pos[:, None]
         x, new_caches, _ = tf.stack_apply(
-            params["decoder"], x, cfg, positions=positions, caches=caches, impl=impl, mesh=mesh
+            params["decoder"], x, cfg, positions=positions, caches=caches, impl=impl, mesh=mesh,
+            ragged=ragged,
         )
         logits = self._logits(params, x, compute)
         return logits, new_caches

@@ -142,6 +142,7 @@ def block_apply(
     impl="xla",
     key=None,
     mesh=None,
+    ragged=False,
 ):
     """Returns (x, new_cache, aux)."""
     kind = _mixer_kind(cfg, j, encoder)
@@ -162,12 +163,12 @@ def block_apply(
         else:
             out, new_mixer_cache = attn_mod.attention_apply(
                 params["mixer"], h, cfg, positions=positions, cache=mixer_cache,
-                update_cache=update_cache, impl=impl,
+                update_cache=update_cache, impl=impl, ragged=ragged,
             )
     elif kind == "mla":
         out, new_mixer_cache = attn_mod.mla_apply(
             params["mixer"], h, cfg, positions=positions, cache=mixer_cache,
-            update_cache=update_cache, impl=impl,
+            update_cache=update_cache, impl=impl, ragged=ragged,
         )
     else:
         out, new_mixer_cache = ssm_mod.ssm_apply(
@@ -290,6 +291,7 @@ def stack_apply(
     key=None,
     n_layers: int | None = None,
     mesh=None,
+    ragged: bool = False,
 ):
     """Returns (x, new_caches, aux_total)."""
     n_layers = n_layers or cfg.n_layers
@@ -311,6 +313,7 @@ def stack_apply(
             x, nc, a = block_apply(
                 layer_params, x, cfg, j, positions=positions, cache=caches[i],
                 update_cache=update_cache, encoder=encoder, impl=impl, key=key, mesh=mesh,
+                ragged=ragged,
             )
             aux = aux + a
             new_caches.append(nc if nc is not None else {})
@@ -326,6 +329,7 @@ def stack_apply(
             h, nc, a = block_apply(
                 layer_params[j], h, cfg, j, positions=positions, cache=cache_j,
                 update_cache=update_cache, encoder=encoder, impl=impl, key=key, mesh=mesh,
+                ragged=ragged,
             )
             aux = aux + a
             new_caches.append(nc if nc is not None else {})

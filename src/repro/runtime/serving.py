@@ -1,22 +1,727 @@
-"""Batched serving: prefill + autoregressive decode with greedy/temperature
-sampling, ragged prompt handling via left-padding, and jitted step reuse.
+"""Continuous-batching serving: RequestQueue -> Scheduler -> KVPool -> decode.
+
+The subsystem replaces the one-shot batch generator with the serving loop a
+production deployment needs (docs/SERVING.md):
+
+* ``RequestQueue`` — admission-ordered queue of ragged requests (each with
+  its own prompt length, token budget, temperature, arrival time).
+* ``KVPool`` — a pooled, slot-indexed KV cache: ``n_slots`` fixed-size cache
+  rows allocated per request and evicted/reused on completion, instead of
+  rebuilding the whole cache per batch.
+* ``Scheduler`` — decides which queued requests enter free decode slots.
+  The ``cost_aware`` policy prices admission with
+  ``core.collectives.CollectiveCostModel``: MoE-dispatch-heavy requests are
+  co-scheduled into the same decode steps so their expert-parallel
+  all-to-all rides the cheap inner mesh axis together (the CLEX level-1
+  rule — push traffic down to the cheap level, amortise the scarce
+  bundle-hop latency across the batch).
+* ``ContinuousBatchingEngine`` — prefill/decode interleaving with
+  per-request completion: finished requests free their slot immediately
+  (no head-of-line blocking) and the next queued request is prefilled into
+  it while the rest of the batch keeps decoding.
+
+``ServingEngine`` (bottom of the file) keeps the seed's one-shot lockstep
+``generate()`` unchanged — it is both the backward-compatible API and the
+baseline that ``benchmarks/serving_bench.py`` measures continuous batching
+against.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import time
+from collections import deque
+from functools import partial
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.collectives import CollectiveCostModel
 from ..models import Model
 
-__all__ = ["ServingEngine"]
+__all__ = [
+    "Request",
+    "RequestQueue",
+    "KVPool",
+    "SchedulerConfig",
+    "Scheduler",
+    "ContinuousBatchingEngine",
+    "ServingEngine",
+]
+
+
+# --------------------------------------------------------------------------
+# requests
+# --------------------------------------------------------------------------
+
+
+QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request moving through queued -> running -> finished."""
+
+    rid: int
+    prompt: np.ndarray  # [L] int32
+    max_new_tokens: int
+    temperature: float = 0.0
+    eos_id: Optional[int] = None
+    arrival_time: Optional[float] = None  # None = available immediately
+    # dispatch_weight: estimated MoE all-to-all bytes per decoded token
+    # (0 for dense models); drives cost-aware co-scheduling
+    dispatch_weight: float = 0.0
+
+    state: str = QUEUED
+    tokens_out: list = dataclasses.field(default_factory=list)
+    deferred: int = 0  # admission rounds the scheduler has deferred this request
+    slot: Optional[int] = None
+    t_submit: float = 0.0
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def moe_heavy(self) -> bool:
+        return self.dispatch_weight > 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.state == FINISHED
+
+
+class RequestQueue:
+    """FIFO of queued requests; ``arrived(now)`` filters by arrival time."""
+
+    def __init__(self):
+        self._q: deque[Request] = deque()
+
+    def push(self, req: Request) -> None:
+        self._q.append(req)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __iter__(self):
+        return iter(self._q)
+
+    def arrived(self, now: Optional[float]) -> list[Request]:
+        """Requests eligible for admission at virtual/wall time ``now``
+        (``now=None`` treats every queued request as arrived)."""
+        if now is None:
+            return list(self._q)
+        return [r for r in self._q if r.arrival_time is None or r.arrival_time <= now]
+
+    def remove(self, reqs: Sequence[Request]) -> None:
+        picked = {id(r) for r in reqs}
+        self._q = deque(r for r in self._q if id(r) not in picked)
+
+    def next_arrival(self) -> Optional[float]:
+        times = [r.arrival_time for r in self._q if r.arrival_time is not None]
+        return min(times) if times else None
+
+
+# --------------------------------------------------------------------------
+# pooled KV cache
+# --------------------------------------------------------------------------
+
+
+def merge_slot_caches(pool_caches, one_caches, slot, stacked: bool):
+    """Write a single-request decode cache (batch dim 1) into row ``slot`` of
+    the pooled cache.  Pure — composes into jitted prefill.  ``stacked`` says
+    whether cache leaves carry a leading scan-repeat dim ([r, B, ...]) so the
+    batch axis is 1 instead of 0."""
+    ax = 1 if stacked else 0
+
+    def write(pool_leaf, one_leaf):
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool_leaf, one_leaf.astype(pool_leaf.dtype), slot, axis=ax
+        )
+
+    return jax.tree.map(write, pool_caches, one_caches)
+
+
+class KVPool:
+    """``n_slots`` fixed-size KV-cache rows, allocated per request and
+    evicted (freed + reused) on completion.
+
+    The pooled cache is the model's native decode layout with batch dim
+    ``n_slots``; each slot holds ``capacity`` ring entries (sliding-window
+    layers hold ``min(capacity, window)`` — same rule as
+    ``Model.prepare_decode_caches``).  Freed slots are reused LIFO so a hot
+    cache row is recycled immediately.
+    """
+
+    def __init__(self, model: Model, n_slots: int, capacity: int):
+        if n_slots < 1:
+            raise ValueError("KVPool needs at least one slot")
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.caches = model.init_cache(n_slots, capacity)
+        cfg = model.cfg
+        self.stacked = cfg.scan_layers and (cfg.n_layers // max(len(self.caches), 1)) > 1
+        self._free: list[int] = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
+        self.slot_rid: list[Optional[int]] = [None] * n_slots
+        self.n_alloc = 0
+        self.n_evict = 0
+        self.high_water = 0
+        self._write = jax.jit(
+            partial(merge_slot_caches, stacked=self.stacked), donate_argnums=0
+        )
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def active_slots(self) -> list[int]:
+        return [s for s, r in enumerate(self.slot_rid) if r is not None]
+
+    def allocate(self, rid: int) -> Optional[int]:
+        """Claim a free slot for ``rid``; None when the pool is exhausted."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self.slot_rid[slot] = rid
+        self.n_alloc += 1
+        self.high_water = max(self.high_water, self.n_used)
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Evict ``slot``'s cache row: the slot returns to the free list and
+        its contents are dead (fully overwritten by the next prefill write)."""
+        if self.slot_rid[slot] is None:
+            raise ValueError(f"slot {slot} is not allocated")
+        self.slot_rid[slot] = None
+        self._free.append(slot)
+        self.n_evict += 1
+
+    def write(self, slot: int, one_caches) -> None:
+        """Install a prepared single-request decode cache into ``slot``."""
+        self.caches = self._write(self.caches, one_caches, jnp.int32(slot))
+
+
+# --------------------------------------------------------------------------
+# scheduler
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Admission knobs (docs/SERVING.md has the full rationale).
+
+    policy           "fcfs" (arrival order) or "cost_aware" (price MoE
+                     dispatch with the CollectiveCostModel and co-schedule)
+    a2a_budget_s     per-decode-step all-to-all budget: admission stops
+                     adding MoE-heavy requests once the predicted step
+                     a2a time would exceed this
+    min_coschedule   hold MoE-heavy requests until this many can enter the
+                     same step (amortise the bundle-hop latency), unless...
+    max_defer_steps  ...a request has been deferred this many admission
+                     rounds (aging — no starvation)
+    work_conserving  never leave a slot idle when anything is queued, even
+                     if over budget
+    n_low / n_pods   mesh shape priced by the cost model (inner cheap axis
+                     x scarce cross-pod axis)
+    """
+
+    policy: str = "cost_aware"
+    a2a_budget_s: float = 2e-3
+    min_coschedule: int = 2
+    max_defer_steps: int = 8
+    work_conserving: bool = True
+    n_low: int = 8
+    n_pods: int = 2
+    bytes_per_elem: float = 2.0
+
+
+class Scheduler:
+    """Picks which arrived requests enter free decode slots.
+
+    ``cost_aware`` implements the CLEX level-1 rule for serving: expert
+    dispatch is the traffic that must ride the cheap inner axis, so requests
+    that generate it are batched into the *same* decode steps (one staged
+    all-to-all amortised over the co-scheduled group) instead of being
+    spread thinly across steps where each would pay the scarce bundle-hop
+    latency alone.  Light (dense) requests fill the remaining slots in
+    arrival order.
+    """
+
+    def __init__(
+        self,
+        cfg: SchedulerConfig,
+        cost_model: Optional[CollectiveCostModel] = None,
+        d_model: int = 1024,
+        top_k: int = 0,
+        n_moe_layers: int = 0,
+    ):
+        if cfg.policy not in ("fcfs", "cost_aware"):
+            raise ValueError(f"unknown policy {cfg.policy!r}")
+        self.cfg = cfg
+        self.cost_model = cost_model or CollectiveCostModel()
+        self.d_model = d_model
+        self.top_k = top_k
+        self.n_moe_layers = n_moe_layers
+        self.last_step_cost = 0.0  # predicted a2a seconds for the last admitted step
+
+    def _step_cost(self, n_heavy: int) -> float:
+        return self.cost_model.decode_step_a2a_cost(
+            n_heavy,
+            self.d_model,
+            max(self.top_k, 1),
+            max(self.n_moe_layers, 1),
+            self.cfg.n_low,
+            self.cfg.n_pods,
+            self.cfg.bytes_per_elem,
+        )
+
+    def select(
+        self,
+        candidates: Sequence[Request],
+        n_free: int,
+        n_heavy_active: int = 0,
+    ) -> list[Request]:
+        """Choose up to ``n_free`` requests to admit this round.
+
+        ``n_heavy_active`` is the number of MoE-heavy requests already
+        decoding (they contribute to the step's all-to-all bill).
+        """
+        if n_free <= 0 or not candidates:
+            return []
+        if self.cfg.policy == "fcfs":
+            return list(candidates[:n_free])
+
+        heavy = [r for r in candidates if r.moe_heavy]
+        light = [r for r in candidates if not r.moe_heavy]
+        picks: list[Request] = []
+
+        aged = any(r.deferred >= self.cfg.max_defer_steps for r in heavy)
+        group_ready = len(heavy) + n_heavy_active >= self.cfg.min_coschedule
+        admit_heavy = heavy and (group_ready or aged or not light)
+
+        if admit_heavy:
+            n_heavy = n_heavy_active
+            for r in heavy:
+                # aging overrides the budget (no starvation even when a single
+                # request busts it, as full-size MoE configs can); every heavy
+                # request left behind this round — budget OR slot exhaustion —
+                # accrues deferral so the aging clock never silently pauses
+                admit = len(picks) < n_free and (
+                    self._step_cost(n_heavy + 1) <= self.cfg.a2a_budget_s
+                    or r.deferred >= self.cfg.max_defer_steps
+                    or (self.cfg.work_conserving and not picks and not light)
+                )
+                if admit:
+                    picks.append(r)
+                    n_heavy += 1
+                else:
+                    r.deferred += 1
+            self.last_step_cost = self._step_cost(n_heavy)
+        else:
+            for r in heavy:
+                r.deferred += 1
+            self.last_step_cost = self._step_cost(n_heavy_active)
+
+        for r in light:
+            if len(picks) >= n_free:
+                break
+            picks.append(r)
+
+        # work conservation: if budget/grouping admitted nothing but slots
+        # are free and requests wait, take the head of the queue anyway
+        if not picks and self.cfg.work_conserving:
+            picks = list(candidates[:n_free])
+        return picks
+
+
+# --------------------------------------------------------------------------
+# continuous-batching engine
+# --------------------------------------------------------------------------
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    steps: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    active_slot_steps: int = 0
+    total_slot_steps: int = 0
+    predicted_a2a_s: float = 0.0
+
+    @property
+    def slot_utilization(self) -> float:
+        return self.active_slot_steps / self.total_slot_steps if self.total_slot_steps else 0.0
+
+
+class ContinuousBatchingEngine:
+    """Prefill/decode-interleaved serving over a pooled KV cache.
+
+    Per step: (1) the scheduler admits arrived requests into free slots —
+    each admission is a batch-1 prefill whose prepared cache is written into
+    its slot; (2) one ragged decode step advances every active slot; rows
+    finishing (token budget or EOS) free their slot for the next admission.
+    No head-of-line blocking: a 4-token request behind a 400-token one
+    completes and hands its slot over 396 steps earlier.
+
+    Sampling is deterministic per (seed, request id, token index) — results
+    do not depend on slot assignment, pool size, or admission order.
+    """
+
+    def __init__(
+        self,
+        model: Model,
+        params,
+        n_slots: int = 8,
+        max_len: int = 512,
+        mesh=None,
+        scheduler: Optional[Scheduler] = None,
+        cost_model: Optional[CollectiveCostModel] = None,
+        policy: str = "cost_aware",
+        seed: int = 0,
+        pad_id: int = 0,
+        min_prompt_bucket: int = 8,
+    ):
+        if model.cfg.enc_dec:
+            raise NotImplementedError("continuous batching supports decoder-only models")
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.pad_id = pad_id
+        self.seed = seed
+        self.queue = RequestQueue()
+        self.pool = KVPool(model, n_slots, max_len)
+        self.metrics = EngineMetrics()
+        self._rid = itertools.count()
+        self.requests: dict[int, Request] = {}
+
+        cfg = model.cfg
+        self._n_moe_layers = sum(cfg.layer_is_moe(i) for i in range(cfg.n_layers))
+        self._dispatch_weight = (
+            float(cfg.moe.top_k * cfg.d_model * 2 * self._n_moe_layers)
+            if cfg.moe is not None
+            else 0.0
+        )
+        if scheduler is None:
+            scheduler = Scheduler(
+                SchedulerConfig(policy=policy),
+                cost_model or CollectiveCostModel(),
+                d_model=cfg.d_model,
+                top_k=cfg.moe.top_k if cfg.moe else 0,
+                n_moe_layers=self._n_moe_layers,
+            )
+        self.scheduler = scheduler
+
+        # SSM state has no positional record, so right-padded prefill would
+        # advance it through pad tokens — bucket only pure-attention stacks
+        self._bucket_prompts = all(cfg.layer_is_attention(i) for i in range(cfg.n_layers))
+        self.min_prompt_bucket = min_prompt_bucket
+
+        # per-slot host state
+        S = n_slots
+        self._slot_req: list[Optional[Request]] = [None] * S
+        self._tokens = np.zeros((S,), np.int32)
+        self._pos = np.zeros((S,), np.int32)
+        self._temps = np.zeros((S,), np.float32)
+        self._rids = np.zeros((S,), np.int32)
+
+        mesh_ = mesh
+        m = model
+
+        # sampling is deterministic per (seed, request id, token index): the
+        # drawn token never depends on slot assignment or admission order
+        def sample_one(logits, temp, rid, idx):
+            base = jax.random.PRNGKey(seed)
+            k = jax.random.fold_in(jax.random.fold_in(base, rid), idx)
+            greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            drawn = jax.random.categorical(k, logits / jnp.maximum(temp, 1e-6), axis=-1)
+            return jnp.where(temp > 0.0, drawn.astype(jnp.int32), greedy)
+
+        # sampling is fused into the prefill/decode jits: one dispatch per
+        # serving step, tokens (not logits) cross the host boundary
+        stacked = self.pool.stacked
+        row_axis = 1 if stacked else 0
+
+        @partial(jax.jit, donate_argnums=(3,))
+        def prefill_into(params, tokens, true_len, pool_caches, slots, temps, rids):
+            """Batched admission: prefill G requests together ([G, bucket])
+            and write each prepared cache row into its pool slot."""
+            g = tokens.shape[0]
+            logits, caches = m.prefill(
+                params, {"tokens": tokens}, mesh=mesh_, last_pos=true_len - 1
+            )
+            caches = m.mask_prompt_cache(caches, true_len)
+            caches = m.prepare_decode_caches(caches, capacity=max_len)
+            for i in range(g):
+                row = jax.tree.map(
+                    lambda c: jax.lax.dynamic_slice_in_dim(c, i, 1, axis=row_axis), caches
+                )
+                pool_caches = merge_slot_caches(pool_caches, row, slots[i], stacked)
+            toks = jax.vmap(sample_one)(
+                logits[:, 0], temps, rids, jnp.zeros((g,), jnp.int32)
+            )
+            return toks, pool_caches
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def decode(params, pool_caches, tokens, pos, temps, rids, idxs):
+            logits, pool_caches = m.decode_step(
+                params, pool_caches, tokens[:, None], pos, mesh=mesh_, ragged=True
+            )
+            toks = jax.vmap(sample_one)(logits[:, 0], temps, rids, idxs)
+            return toks, pool_caches
+
+        self._prefill_into = prefill_into
+        self._decode = decode
+
+    # ---------------- submission ----------------
+
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        eos_id: Optional[int] = None,
+        arrival_time: Optional[float] = None,
+        dispatch_weight: Optional[float] = None,
+        now: Optional[float] = None,
+    ) -> int:
+        """Enqueue one request; returns its request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size < 1:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if prompt.size + max_new_tokens > self.pool.capacity:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds pool capacity {self.pool.capacity}"
+            )
+        req = Request(
+            rid=next(self._rid),
+            prompt=prompt,
+            max_new_tokens=int(max_new_tokens),
+            temperature=float(temperature),
+            eos_id=eos_id,
+            arrival_time=arrival_time,
+            dispatch_weight=(
+                self._dispatch_weight if dispatch_weight is None else dispatch_weight
+            ),
+            t_submit=now if now is not None else time.monotonic(),
+        )
+        self.requests[req.rid] = req
+        self.queue.push(req)
+        return req.rid
+
+    # ---------------- serving loop ----------------
+
+    def _bucket(self, length: int) -> int:
+        if not self._bucket_prompts:
+            return length
+        return min(max(_next_pow2(length), self.min_prompt_bucket), self.pool.capacity)
+
+    def _admission_groups(self, picks: list[Request]) -> list[list[Request]]:
+        """Split admitted requests into batched-prefill groups.  Group sizes
+        are powers of two and prompts pad to the group's max bucket, so the
+        number of distinct compiled prefill shapes stays O(buckets * log
+        slots).  Non-bucketing (SSM-bearing) models prefill one by one at
+        exact length."""
+        if not self._bucket_prompts:
+            return [[r] for r in picks]
+        groups, i = [], 0
+        while i < len(picks):
+            g = 1 << ((len(picks) - i).bit_length() - 1)  # largest pow2 <= rest
+            groups.append(picks[i : i + g])
+            i += g
+        return groups
+
+    def _admit_group(self, group: list[Request], now: float) -> None:
+        g = len(group)
+        slots = [self.pool.allocate(r.rid) for r in group]
+        assert all(s is not None for s in slots)
+        bucket = max(self._bucket(r.prompt_len) for r in group)
+        toks = np.full((g, bucket), self.pad_id, np.int32)
+        for i, r in enumerate(group):
+            toks[i, : r.prompt_len] = r.prompt
+        firsts, self.pool.caches = self._prefill_into(
+            self.params,
+            jnp.asarray(toks),
+            jnp.asarray([r.prompt_len for r in group], jnp.int32),
+            self.pool.caches,
+            jnp.asarray(slots, jnp.int32),
+            jnp.asarray([r.temperature for r in group], jnp.float32),
+            jnp.asarray([r.rid for r in group], jnp.int32),
+        )
+        self.metrics.prefills += 1
+        firsts = np.asarray(firsts)
+        for i, (req, slot) in enumerate(zip(group, slots)):
+            tok = int(firsts[i])
+            req.state = RUNNING
+            req.slot = slot
+            req.t_admit = now
+            req.t_first = now
+            req.tokens_out.append(tok)
+            self._slot_req[slot] = req
+            self._tokens[slot] = tok
+            self._pos[slot] = req.prompt_len
+            self._temps[slot] = req.temperature
+            self._rids[slot] = req.rid
+            self._maybe_finish(req, tok, now)
+
+    def _maybe_finish(self, req: Request, last_tok: int, now: float) -> None:
+        hit_eos = req.eos_id is not None and last_tok == req.eos_id
+        if hit_eos or len(req.tokens_out) >= req.max_new_tokens:
+            req.state = FINISHED
+            req.t_done = now
+            self.pool.free(req.slot)
+            self._slot_req[req.slot] = None
+            req.slot = None
+
+    def step(self, now: Optional[float] = None) -> int:
+        """One scheduling round: admit, then one ragged decode step for all
+        active slots.  Returns the number of tokens produced."""
+        if now is None:
+            now = time.monotonic()
+        produced = 0
+
+        # ---- admission: fill freed slots from the queue
+        candidates = self.queue.arrived(now)
+        if candidates and self.pool.n_free:
+            n_heavy_active = sum(
+                1 for r in self._slot_req if r is not None and r.moe_heavy
+            )
+            picks = self.scheduler.select(candidates, self.pool.n_free, n_heavy_active)
+            self.queue.remove(picks)
+            for group in self._admission_groups(picks):
+                self._admit_group(group, now)
+                produced += len(group)
+            self.metrics.predicted_a2a_s += self.scheduler.last_step_cost
+
+        # ---- one decode step over the pool
+        active = [r for r in self._slot_req if r is not None]
+        if active:
+            idxs = np.array(
+                [len(r.tokens_out) if r is not None else 0 for r in self._slot_req],
+                np.int32,
+            )
+            toks, self.pool.caches = self._decode(
+                self.params,
+                self.pool.caches,
+                jnp.asarray(self._tokens),
+                jnp.asarray(self._pos),
+                jnp.asarray(self._temps),
+                jnp.asarray(self._rids),
+                jnp.asarray(idxs),
+            )
+            toks = np.asarray(toks)
+            self.metrics.decode_steps += 1
+            self.metrics.total_slot_steps += self.pool.n_slots
+            for slot, req in enumerate(self._slot_req):
+                if req is None:
+                    continue
+                tok = int(toks[slot])
+                req.tokens_out.append(tok)
+                self._tokens[slot] = tok
+                self._pos[slot] += 1
+                self.metrics.active_slot_steps += 1
+                produced += 1
+                self._maybe_finish(req, tok, now)
+
+        self.metrics.steps += 1
+        return produced
+
+    def run(
+        self,
+        clock: Optional[Callable[[], float]] = None,
+        max_steps: int = 1_000_000,
+    ) -> dict[int, np.ndarray]:
+        """Drive ``step()`` until queue and slots drain; returns
+        {rid: generated tokens}.  ``clock`` gates open-loop arrivals (defaults
+        to ``time.monotonic``); closed-loop submissions (``arrival_time=None``)
+        are always eligible.  With the default wall clock, an idle engine
+        sleeps until the next arrival; a custom (virtual) clock instead
+        fast-forwards to it — discrete-event style — since sleeping cannot
+        advance simulated time."""
+        wall = clock is None
+        clock = clock or time.monotonic
+        for _ in range(max_steps):
+            if not len(self.queue) and not any(
+                r is not None for r in self._slot_req
+            ):
+                break
+            made = self.step(clock())
+            if made == 0 and not any(r is not None for r in self._slot_req):
+                nxt = self.queue.next_arrival()
+                if nxt is not None and clock() < nxt:
+                    if wall:
+                        # idle until the next open-loop arrival
+                        while clock() < nxt:
+                            time.sleep(min(1e-3, max(nxt - clock(), 0.0)))
+                    else:
+                        self.step(nxt)  # jump virtual time to the arrival
+        return {
+            rid: np.asarray(r.tokens_out, np.int32)
+            for rid, r in self.requests.items()
+            if r.done
+        }
+
+    def generate(
+        self,
+        prompts,
+        max_new_tokens,
+        temperature: float = 0.0,
+        eos_id: Optional[int] = None,
+    ) -> list[np.ndarray]:
+        """Closed-loop convenience: submit ``prompts`` (list of 1-D arrays or a
+        2-D array), run to completion, return outputs in submission order."""
+        if isinstance(prompts, np.ndarray) and prompts.ndim == 2:
+            prompts = list(prompts)
+        budgets = (
+            max_new_tokens
+            if isinstance(max_new_tokens, (list, tuple))
+            else [max_new_tokens] * len(prompts)
+        )
+        if len(budgets) != len(prompts):
+            raise ValueError(
+                f"{len(prompts)} prompts but {len(budgets)} max_new_tokens entries"
+            )
+        rids = [
+            self.submit(p, b, temperature=temperature, eos_id=eos_id)
+            for p, b in zip(prompts, budgets)
+        ]
+        out = self.run()
+        return [out[r] for r in rids]
+
+
+# --------------------------------------------------------------------------
+# one-shot lockstep engine (seed API, and the bench baseline)
+# --------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class ServingEngine:
+    """One-shot batch generator: a single prefill over a fixed (left-padded)
+    batch, then lockstep decode for a fixed token budget.  Kept as the
+    backward-compatible ``generate()`` wrapper and as the baseline the
+    serving benchmark compares continuous batching against — it has exactly
+    the failure modes the pooled engine removes (idle slots after short
+    requests finish, head-of-line blocking between batches)."""
+
     model: Model
     params: object
     max_len: int = 512

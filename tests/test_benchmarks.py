@@ -29,6 +29,30 @@ def test_benchmarks_run_tiny_emits_wellformed_json(tmp_path, capsys):
     assert lines and all(len(l.split(",", 2)) == 3 for l in lines)
 
 
+def test_serving_bench_tiny_emits_wellformed_json(tmp_path):
+    """serving_bench --tiny runs both engines on both workloads and writes
+    BENCH_serving.json with the metric schema docs/SERVING.md documents."""
+    from benchmarks.serving_bench import main
+
+    results = main(["--tiny", "--requests", "6", "--slots", "2",
+                    "--out", str(tmp_path)])
+    on_disk = json.loads((tmp_path / "BENCH_serving.json").read_text())
+    assert set(on_disk) == set(results)
+    assert {"config", "closed_ragged", "open_poisson"} <= set(on_disk)
+    for wl in ("closed_ragged", "open_poisson"):
+        row = on_disk[wl]
+        assert "speedup_tokens_per_s" in row
+        for eng in ("continuous", "one_shot"):
+            stats = row[eng]
+            assert {"tokens", "tokens_per_s", "latency_p50_s", "latency_p99_s",
+                    "slot_utilization"} <= set(stats)
+            assert stats["tokens"] > 0 and stats["tokens_per_s"] > 0
+            assert 0 < stats["slot_utilization"] <= 1
+    # both engines served exactly the same useful tokens
+    assert (on_disk["closed_ragged"]["continuous"]["tokens"]
+            == on_disk["closed_ragged"]["one_shot"]["tokens"])
+
+
 def test_paper_tables_row_shape():
     from benchmarks.paper_tables import run_table
 
