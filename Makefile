@@ -6,7 +6,7 @@ PYTEST ?= python -m pytest
 # a missing plugin).  70 is a floor — raise it as coverage grows.
 COVFLAGS := $(shell python -c "import pytest_cov" 2>/dev/null && echo "--cov=repro --cov-fail-under=70")
 
-.PHONY: verify test deps linkcheck
+.PHONY: verify test deps linkcheck bench-training
 
 # Docs gate: no references to non-existent docs/*.md or repo-root *.md files
 # from Python docstrings or markdown (tools/check_doc_links.py).
@@ -20,6 +20,14 @@ verify: linkcheck
 
 test:
 	PYTHONPATH=src $(PYTEST) -q
+
+# Training-goodput bench (docs/TRAINING.md): orchestrated elastic recovery
+# vs checkpoint-restart under fault scenarios.  Writes
+# benchmarks/results/BENCH_training.json and syncs the repo-root copy.
+# CI runs the --tiny variant: make bench-training BENCH_TRAINING_FLAGS=--tiny
+BENCH_TRAINING_FLAGS ?=
+bench-training:
+	PYTHONPATH=src python -m benchmarks.training_bench $(BENCH_TRAINING_FLAGS)
 
 deps:
 	pip install -r requirements-dev.txt

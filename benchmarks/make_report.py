@@ -5,10 +5,16 @@
   flooding results from ``benchmarks/results/bench_results.json`` (written
   by ``python -m benchmarks.run``).
 
+It also syncs every ``benchmarks/results/BENCH_*.json`` artifact to a
+repo-root copy (``sync_bench_artifacts``) so the bench trajectory
+(serving: ``benchmarks/serving_bench.py``; training:
+``benchmarks/training_bench.py``) is tracked at the top level.
+
 Hand-written sections (everything outside the AUTO-* markers) are kept
 intact; a skeleton EXPERIMENTS.md is created when missing.  The design
 behind the reported schedules is in docs/ARCHITECTURE.md; the simulator
-knobs are in docs/SIMULATOR.md.
+knobs are in docs/SIMULATOR.md; the training orchestrator in
+docs/TRAINING.md.
 """
 
 from __future__ import annotations
@@ -100,6 +106,22 @@ def build_simulator(results_path: str = "benchmarks/results/bench_results.json")
     return "\n".join(lines) if lines else "\n(no simulator sections in results)\n"
 
 
+def sync_bench_artifacts(results_dir: str = "benchmarks/results",
+                         dest_dir: str = ".") -> list[str]:
+    """Copy every ``BENCH_*.json`` from ``results_dir`` to ``dest_dir``
+    (repo root by default) so top-level bench artifacts track the latest
+    runs.  Returns the destination paths written."""
+    import glob
+    import shutil
+
+    written = []
+    for src in sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json"))):
+        dst = os.path.join(dest_dir, os.path.basename(src))
+        shutil.copyfile(src, dst)
+        written.append(dst)
+    return written
+
+
 def _splice(text: str, begin: str, end: str, body: str) -> str:
     if begin not in text or end not in text:
         return text
@@ -121,6 +143,9 @@ def main(path: str = "EXPERIMENTS.md",
         text = _splice(text, BEGIN, END, f"\n(roofline unavailable: {e})\n")
     open(path, "w").write(text)
     print(f"{path} auto-generated sections refreshed")
+    synced = sync_bench_artifacts(os.path.dirname(results_path) or "benchmarks/results")
+    if synced:
+        print(f"synced bench artifacts: {', '.join(synced)}")
 
 
 if __name__ == "__main__":

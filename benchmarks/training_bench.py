@@ -1,0 +1,325 @@
+"""Training goodput under faults: elastic orchestration vs checkpoint-restart.
+
+Runs the same fault scenarios against two recovery disciplines and writes
+``benchmarks/results/BENCH_training.json`` (synced to the repo-root
+``BENCH_training.json`` via ``benchmarks.make_report``):
+
+* **orchestrated** — ``runtime.orchestrator.Orchestrator``: device loss
+  triggers an in-memory remesh+reshard at the step boundary (no lost work,
+  async fallback checkpoints off the critical path); link degradation
+  switches the gradient-sync tier priced by ``CollectiveCostModel``.
+* **baseline** — ``runtime.fault_tolerance.run_with_restarts``: the
+  classical watchdog.  A fault kills the step; the job restarts on the
+  surviving mesh from the latest intact checkpoint and replays the steps
+  since (synchronous checkpoint saves every ``ckpt_every`` steps).
+
+Goodput = useful steps / seconds.  For device-loss scenarios that is pure
+measured wall clock (both engines pay the same compiles; the baseline
+additionally pays restore I/O + replayed steps).  For link-degradation
+scenarios wall clock on CPU cannot see bandwidth, so each engine's ledger
+adds *modeled* gradient-sync seconds per step — priced by
+``CollectiveCostModel.grad_sync_cost`` at a production-scale gradient
+volume (``--grad-gb``) under the degraded bandwidth — and the scenario is
+marked ``"modeled_comm": true``.  Tier-switch recompiles are measured wall
+time and charged to the orchestrated engine.
+
+  PYTHONPATH=src python -m benchmarks.training_bench --tiny
+  PYTHONPATH=src python -m benchmarks.training_bench --steps 30
+
+See docs/TRAINING.md for the orchestrator states and knobs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+
+
+def _build(arch: str, tiny: bool):
+    from repro.configs.base import get_config
+    from repro.models import build_model
+
+    cfg = get_config(arch, reduced=True)
+    layers = 2 if tiny else 4
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", remat=False, n_layers=layers)
+    return build_model(cfg)
+
+
+def _schedules(n_steps: int, ckpt_every: int):
+    """Fault scenarios, expressed as orchestrator schedules.  Loss events
+    land exactly at a checkpoint-boundary step, i.e. ``ckpt_every`` steps
+    after the last completed save — the worst case for the restart baseline
+    (maximal replay of uncheckpointed work), an irrelevant placement for the
+    elastic path (it never replays)."""
+    from repro.runtime.orchestrator import FaultEvent, FaultSchedule
+
+    mid = min(max((n_steps // (2 * ckpt_every)) * ckpt_every, ckpt_every), n_steps - 2)
+    early = min(ckpt_every, n_steps - 2)
+    late = min(mid + ckpt_every, n_steps - 1)
+    return {
+        "fault_free": FaultSchedule(),
+        "single_device_loss": FaultSchedule(
+            (FaultEvent(step=mid, kind="device_loss", devices=2),)
+        ),
+        "double_device_loss": FaultSchedule((
+            FaultEvent(step=early, kind="device_loss", devices=2),
+            FaultEvent(step=late, kind="device_loss", devices=1),
+        )),
+        "link_degradation": FaultSchedule(
+            (FaultEvent(step=early, kind="link_degraded", bandwidth_factor=0.1),)
+        ),
+    }
+
+
+def _link_factor_by_step(schedule, n_steps: int) -> list[float]:
+    factors, factor = [], 1.0
+    by_step = {}
+    for e in schedule.events:
+        if e.kind in ("link_degraded", "link_restored"):
+            by_step[e.step] = e.bandwidth_factor if e.kind == "link_degraded" else 1.0
+    for s in range(n_steps):
+        factor = by_step.get(s, factor)
+        factors.append(factor)
+    return factors
+
+
+def _modeled_comm_s(schedule, n_steps, bytes_per_chip, n_low, n_pods,
+                    tier_by_step=None) -> float:
+    """Σ modeled gradient-sync seconds over the run (0 without link events)."""
+    from repro.core.collectives import CollectiveCostModel
+
+    if not any(e.kind == "link_degraded" for e in schedule.events):
+        return 0.0
+    cm = CollectiveCostModel()
+    total = 0.0
+    for step, factor in enumerate(_link_factor_by_step(schedule, n_steps)):
+        compressed = bool(tier_by_step and tier_by_step[step] == "compressed")
+        total += cm.degraded(factor).grad_sync_cost(
+            bytes_per_chip, n_low, n_pods, compressed=compressed
+        )
+    return total
+
+
+def _orchestrated_tiers(report, n_steps: int) -> list[str]:
+    tiers, tier = [], "plain"
+    by_step = {s["step"]: s["tier"] for s in report.sync_switches}
+    for s in range(n_steps):
+        tier = by_step.get(s, tier)
+        tiers.append(tier)
+    return tiers
+
+
+def run_orchestrated(model, opt_cfg, pcfg, mesh, pipe, schedule, n_steps,
+                     ckpt_dir, ckpt_every):
+    from repro.runtime.orchestrator import Orchestrator, OrchestratorConfig
+    from repro.runtime.trainer import Trainer
+
+    trainer = Trainer(model, opt_cfg, pcfg, mesh=mesh)
+    params, opt = trainer.init(jax.random.PRNGKey(0))
+    orch = Orchestrator(
+        model, opt_cfg, pcfg, mesh=mesh, schedule=schedule,
+        cfg=OrchestratorConfig(ckpt_dir=ckpt_dir, ckpt_every=ckpt_every),
+    )
+    t0 = time.monotonic()
+    params, opt, report = orch.run(params, opt, pipe, n_steps)
+    wall = time.monotonic() - t0
+    return {
+        "wall_s": wall,
+        "useful_steps": report.useful_steps,
+        "wasted_steps": 0,
+        "restores": report.restores,
+        "remesh_events": len(report.remesh_events),
+        "sync_switches": [
+            {k: s[k] for k in ("step", "tier", "switched")} for s in report.sync_switches
+        ],
+        "final_mesh": report.mesh_history[-1][1],
+    }, report
+
+
+def run_restart_baseline(model, opt_cfg, pcfg, mesh, pipe, schedule, n_steps,
+                         ckpt_dir, ckpt_every):
+    """The naive discipline: every fault crashes the job; recovery is
+    restore-latest-checkpoint + replay on the surviving mesh."""
+    from repro.launch.jax_compat import use_mesh
+    from repro.launch.mesh import make_elastic_mesh
+    from repro.runtime.fault_tolerance import plan_remesh, run_with_restarts
+    from repro.runtime.trainer import Trainer
+
+    import numpy as np
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    mp = sizes.get("model", 1)
+    cur = {"mesh": mesh, "devices": int(np.prod(mesh.devices.shape)),
+           "dp": sizes.get("pod", 1) * sizes.get("data", 1)}
+    trainer = Trainer(model, opt_cfg, pcfg, mesh=mesh)
+    params0, opt0 = trainer.init(jax.random.PRNGKey(0))
+    cur["step_fn"] = trainer.jitted_step(donate=False)
+    fired = set()
+    executed = {"n": 0}
+
+    def shrink(lost: int):
+        survivors = cur["devices"] - lost
+        plan = plan_remesh(survivors, mp, pipe.global_batch, prev_dp=cur["dp"])
+        new_mesh = make_elastic_mesh(plan.data_parallel * plan.model_parallel, mp)
+        t = Trainer(model, opt_cfg, pcfg, mesh=new_mesh,
+                    microbatches=plan.microbatches)
+        cur.update(mesh=new_mesh, devices=plan.data_parallel * plan.model_parallel,
+                   dp=plan.data_parallel, step_fn=t.jitted_step(donate=False))
+
+    def step_fn(state, step):
+        for ev in schedule.at(step):
+            if ev.kind in ("device_loss", "pod_loss") and ev not in fired:
+                fired.add(ev)
+                pod = (dict(zip(cur["mesh"].axis_names, cur["mesh"].devices.shape))
+                       .get("data", 1) * mp)
+                shrink(ev.devices * (pod if ev.kind == "pod_loss" else 1))
+                raise RuntimeError(f"injected {ev.kind} at step {step}")
+        params, opt = state
+        batch = {k: jnp.asarray(v) for k, v in pipe.global_batch_arrays(step).items()}
+        with use_mesh(cur["mesh"]):
+            params, opt, metrics = cur["step_fn"](params, opt, batch)
+        jax.block_until_ready(metrics["loss"])
+        executed["n"] += 1
+        return (params, opt)
+
+    t0 = time.monotonic()
+    (params, opt), restarts = run_with_restarts(
+        step_fn, (params0, opt0), n_steps, ckpt_dir, ckpt_every=ckpt_every
+    )
+    wall = time.monotonic() - t0
+    return {
+        "wall_s": wall,
+        "useful_steps": n_steps,
+        "wasted_steps": executed["n"] - n_steps,
+        "restores": restarts,
+        "remesh_events": len(fired),
+        "final_mesh": "x".join(
+            f"{a}={n}" for a, n in zip(cur["mesh"].axis_names, cur["mesh"].devices.shape)
+        ),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--tiny", action="store_true", help="CI smoke scale")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=None)
+    ap.add_argument("--grad-gb", type=float, default=4.0,
+                    help="modeled production gradient volume per chip (GB) "
+                         "for link-degradation comm pricing")
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--scenarios", default="", help="comma-separated subset")
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import ParallelConfig
+    from repro.data.pipeline import SyntheticLM
+    from repro.launch.jax_compat import make_mesh
+    from repro.optim.adamw import AdamWConfig
+
+    n_steps = args.steps or (8 if args.tiny else 30)
+    seq = args.seq or (32 if args.tiny else 64)
+    ckpt_every = args.ckpt_every or (2 if args.tiny else 5)
+    model = _build(args.arch, args.tiny)
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=n_steps)
+    pipe = SyntheticLM(vocab=model.cfg.vocab, seq_len=seq, global_batch=args.batch)
+    schedules = _schedules(n_steps, ckpt_every)
+    if args.scenarios:
+        keep = set(args.scenarios.split(","))
+        schedules = {k: v for k, v in schedules.items() if k in keep}
+
+    os.makedirs(args.out, exist_ok=True)
+    results = {
+        "config": {
+            "arch": args.arch, "tiny": args.tiny, "steps": n_steps,
+            "batch": args.batch, "seq": seq, "ckpt_every": ckpt_every,
+            "grad_gb": args.grad_gb, "devices": len(jax.devices()),
+        },
+        "scenarios": {},
+    }
+
+    for name, schedule in schedules.items():
+        link = any(e.kind == "link_degraded" for e in schedule.events)
+        if link:
+            # link tiering needs a pod axis + hierarchical sync
+            mesh = make_mesh((2, 2, 1), ("pod", "data", "model"))
+            pcfg = ParallelConfig(hierarchical_grad_sync=True)
+            n_low, n_pods = 2, 2
+        else:
+            mesh = make_mesh((4, 1), ("data", "model"),
+                             devices=jax.devices()[:4])
+            pcfg = ParallelConfig()
+            n_low, n_pods = 4, 1
+        bytes_per_chip = args.grad_gb * 1e9
+
+        import shutil
+        import tempfile
+
+        work = tempfile.mkdtemp(prefix=f"training_bench_{name}_")
+        try:
+            orch_stats, report = run_orchestrated(
+                model, opt_cfg, pcfg, mesh, pipe, schedule, n_steps,
+                os.path.join(work, "orch"), ckpt_every,
+            )
+            base_stats = run_restart_baseline(
+                model, opt_cfg, pcfg, mesh, pipe, schedule, n_steps,
+                os.path.join(work, "base"), ckpt_every,
+            )
+        finally:
+            shutil.rmtree(work, ignore_errors=True)
+
+        orch_comm = _modeled_comm_s(
+            schedule, n_steps, bytes_per_chip, n_low, n_pods,
+            tier_by_step=_orchestrated_tiers(report, n_steps),
+        )
+        base_comm = _modeled_comm_s(schedule, n_steps, bytes_per_chip, n_low, n_pods)
+        for stats, comm in ((orch_stats, orch_comm), (base_stats, base_comm)):
+            stats["modeled_comm_s"] = comm
+            stats["goodput_steps_per_s"] = stats["useful_steps"] / (
+                stats["wall_s"] + comm
+            )
+        row = {
+            "modeled_comm": link,
+            "events": [dataclasses.asdict(e) for e in schedule.events],
+            "orchestrated": orch_stats,
+            "baseline": base_stats,
+            "goodput_ratio": (
+                orch_stats["goodput_steps_per_s"] / base_stats["goodput_steps_per_s"]
+            ),
+        }
+        results["scenarios"][name] = row
+        print(
+            f"{name}: orchestrated {orch_stats['goodput_steps_per_s']:.3f} steps/s "
+            f"vs baseline {base_stats['goodput_steps_per_s']:.3f} "
+            f"(x{row['goodput_ratio']:.2f}; baseline wasted "
+            f"{base_stats['wasted_steps']} steps, {base_stats['restores']} restores)",
+            flush=True,
+        )
+
+    out_path = os.path.join(args.out, "BENCH_training.json")
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}")
+    if os.path.abspath(args.out) == os.path.abspath("benchmarks/results"):
+        from benchmarks.make_report import sync_bench_artifacts
+
+        sync_bench_artifacts()
+    return results
+
+
+if __name__ == "__main__":
+    main()

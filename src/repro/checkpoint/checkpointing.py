@@ -4,16 +4,28 @@ Properties needed at 1000-node scale:
 
 * **Atomic** — write to ``<dir>/tmp.<step>`` then ``os.rename`` so a crash
   mid-write never corrupts the latest checkpoint.
-* **Self-validating** — a manifest with per-leaf shapes/dtypes and a
-  checksum; ``restore`` refuses silently-truncated files.
+* **Self-validating** — a manifest with per-leaf shapes/dtypes/sha256 and a
+  whole-checkpoint checksum; ``restore`` refuses silently-truncated files,
+  and ``restore_checkpoint(step=None)`` walks back to the latest *intact*
+  step when the newest one is damaged.
 * **Mesh-agnostic** — leaves are stored as full (unsharded) arrays with
   their tree paths; restore reshards onto whatever mesh/devices the new
   job has (elastic re-mesh after failures).
-* **Keep-N** — bounded disk usage with monotone step directories.
+* **Keep-N** — bounded disk usage; pruning removes the *oldest* steps first
+  and never the newest.
+* **Async** — :class:`AsyncCheckpointer` snapshots device arrays to host
+  synchronously (cheap) and writes to disk on a background thread,
+  double-buffered: one write may be in flight while training continues; a
+  save issued while two are pending blocks on the oldest, bounding both
+  memory (≤ 2 host snapshots) and write-queue depth.  This is the
+  orchestrator's fallback path (docs/TRAINING.md) — the happy path after a
+  fault is an in-memory reshard that never touches these files.
 """
 
 from __future__ import annotations
 
+import collections
+import concurrent.futures
 import hashlib
 import json
 import os
@@ -22,7 +34,14 @@ import shutil
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "latest_intact_step",
+    "verify_checkpoint",
+    "AsyncCheckpointer",
+]
 
 _MANIFEST = "manifest.json"
 _DATA = "arrays.npz"
@@ -33,24 +52,53 @@ def _flatten(tree):
     return {jax.tree_util.keystr(path): np.asarray(leaf) for path, leaf in flat}, treedef
 
 
+def _leaf_digest(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def _tree_digest(leaf_digests: dict) -> str:
+    """Whole-checkpoint checksum derived from the per-leaf digests, so every
+    byte is hashed exactly once."""
+    digest = hashlib.sha256()
+    for k in sorted(leaf_digests):
+        digest.update(k.encode())
+        digest.update(leaf_digests[k].encode())
+    return digest.hexdigest()
+
+
+def _check_digests(data, manifest) -> list[str]:
+    """Names of damaged/missing/spurious leaves ([] when intact)."""
+    leaves = manifest["leaves"]
+    bad = sorted(set(data.files) ^ set(leaves))
+    for k in sorted(set(data.files) & set(leaves)):
+        if _leaf_digest(data[k]) != leaves[k]["sha256"]:
+            bad.append(k)
+    if not bad and _tree_digest({k: v["sha256"] for k, v in leaves.items()}) != (
+        manifest["checksum"]
+    ):
+        bad.append("<manifest checksum>")
+    return bad
+
+
 def save_checkpoint(directory: str, step: int, tree, keep: int = 3) -> str:
+    arrays, _ = _flatten(tree)
+    return _write_arrays(directory, step, arrays, keep)
+
+
+def _write_arrays(directory: str, step: int, arrays: dict, keep: int) -> str:
     os.makedirs(directory, exist_ok=True)
     tmp = os.path.join(directory, f"tmp.{step}")
     final = os.path.join(directory, f"step_{step:010d}")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    arrays, _ = _flatten(tree)
     np.savez(os.path.join(tmp, _DATA), **arrays)
-    digest = hashlib.sha256()
-    for k in sorted(arrays):
-        digest.update(k.encode())
-        digest.update(np.ascontiguousarray(arrays[k]).tobytes())
-    manifest = {
-        "step": step,
-        "checksum": digest.hexdigest(),
-        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in arrays.items()},
+    leaf_digests = {k: _leaf_digest(v) for k, v in arrays.items()}
+    leaves = {
+        k: {"shape": list(v.shape), "dtype": str(v.dtype), "sha256": leaf_digests[k]}
+        for k, v in arrays.items()
     }
+    manifest = {"step": step, "checksum": _tree_digest(leaf_digests), "leaves": leaves}
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -84,25 +132,50 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def verify_checkpoint(directory: str, step: int) -> bool:
+    """True iff the checkpoint at ``step`` exists and every leaf passes its
+    manifest digest (detects truncation, bit flips, and missing files)."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    try:
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, _DATA)) as data:
+            return not _check_digests(data, manifest)
+    except Exception:  # noqa: BLE001 - any damage means "not intact"
+        return False
+
+
+def latest_intact_step(directory: str) -> int | None:
+    """Newest step that passes integrity validation (None when none do)."""
+    for s in reversed(_steps(directory)):
+        if verify_checkpoint(directory, s):
+            return s
+    return None
+
+
 def restore_checkpoint(directory: str, tree_like, step: int | None = None):
     """Restore into the structure of ``tree_like`` (shape/dtype validated).
 
-    Returns (tree, step).  Raises on checksum mismatch or structural drift.
+    Returns (tree, step).  With an explicit ``step`` any damage raises; with
+    ``step=None`` the newest *intact* checkpoint is restored, silently
+    skipping damaged newer ones (the crash that truncated them is exactly
+    why we are restoring).  Raises when no intact checkpoint exists.
     """
     if step is None:
-        step = latest_step(directory)
+        step = latest_intact_step(directory)
         if step is None:
+            if _steps(directory):
+                raise IOError(f"no intact checkpoint under {directory} (all damaged)")
             raise FileNotFoundError(f"no checkpoints under {directory}")
     path = os.path.join(directory, f"step_{step:010d}")
     with open(os.path.join(path, _MANIFEST)) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, _DATA))
-    digest = hashlib.sha256()
-    for k in sorted(data.files):
-        digest.update(k.encode())
-        digest.update(np.ascontiguousarray(data[k]).tobytes())
-    if digest.hexdigest() != manifest["checksum"]:
-        raise IOError(f"checkpoint {path} failed checksum validation")
+    bad = _check_digests(data, manifest)
+    if bad:
+        raise IOError(
+            f"checkpoint {path} failed integrity validation at: {', '.join(bad[:5])}"
+        )
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
     leaves = []
@@ -115,3 +188,49 @@ def restore_checkpoint(directory: str, tree_like, step: int | None = None):
             raise ValueError(f"shape drift at {key}: {arr.shape} vs {leaf.shape}")
         leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+class AsyncCheckpointer:
+    """Double-buffered background checkpoint writer.
+
+    ``save`` copies the tree to host memory synchronously (device_get +
+    np.asarray — the only part that must see a consistent step boundary)
+    and hands the disk write to a single worker thread.  At most
+    ``max_in_flight`` (default 2: the double buffer) writes may be pending;
+    a further ``save`` blocks on the oldest, so a slow filesystem applies
+    back-pressure instead of accumulating host snapshots.  Write errors
+    surface on the *next* ``save``/``wait`` call, never silently.
+    """
+
+    def __init__(self, max_in_flight: int = 2):
+        if max_in_flight < 1:
+            raise ValueError(f"max_in_flight must be >= 1, got {max_in_flight}")
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: collections.deque = collections.deque()
+        self._max = max_in_flight
+
+    def save(self, directory: str, step: int, tree, keep: int = 3) -> None:
+        flat, _ = _flatten(jax.device_get(tree))
+        # true snapshot: device_get is a no-op for numpy leaves (and may
+        # alias host-side XLA buffers), so copy before handing to the worker
+        arrays = {k: np.array(v) for k, v in flat.items()}
+        while len(self._pending) >= self._max:
+            self._pending.popleft().result()
+        self._pending.append(
+            self._pool.submit(_write_arrays, directory, step, arrays, keep)
+        )
+
+    def wait(self) -> None:
+        """Drain all pending writes (re-raising any write error)."""
+        while self._pending:
+            self._pending.popleft().result()
+
+    def close(self) -> None:
+        self.wait()
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -211,6 +211,14 @@ class CollectiveCostModel:
     dcn_bw: float = 6.25e9  # ~1/8 of ICI: cross-pod links are the slow level
     ici_latency: float = 1e-6  # per-message setup/hop overhead (CLEX's c_h)
     dcn_latency: float = 10e-6
+    quant_bw: float = 100e9  # int8 quantise/dequantise throughput (bytes/s)
+
+    def degraded(self, dcn_factor: float) -> "CollectiveCostModel":
+        """The same machine with the scarce top-level links running at
+        ``dcn_factor`` of nominal bandwidth (a top-level bundle fault)."""
+        if not 0.0 < dcn_factor:
+            raise ValueError(f"dcn_factor must be positive, got {dcn_factor}")
+        return dataclasses.replace(self, dcn_bw=self.dcn_bw * dcn_factor)
 
     def flat_all_reduce(self, bytes_per_chip: float, n_low: int, n_pods: int) -> float:
         """Ring all-reduce over the full (low x pod) group: every byte
@@ -259,6 +267,34 @@ class CollectiveCostModel:
             else 0.0
         )
         return stage1 + stage2
+
+    # ---------------- training-orchestrator hooks (docs/TRAINING.md) ----------
+
+    def grad_sync_cost(
+        self,
+        bytes_per_chip: float,
+        n_low: int,
+        n_pods: int,
+        compressed: bool = False,
+        compress_ratio: float = 0.26,
+    ) -> float:
+        """Wall-clock seconds for one staged gradient sync.  With
+        ``compressed`` the (already reduce-scattered) cross-pod shard moves
+        int8+scale (``compress_ratio`` of fp32 bytes) but pays quantise +
+        dequantise passes over the shard at ``quant_bw``.  The orchestrator
+        prices both tiers with this (on a ``degraded()`` model when a
+        top-level link fault is active) and switches to the compressed tier
+        only when the plain tier has become markedly more expensive than its
+        fault-free cost — int8 spends accuracy headroom, so it is a repair,
+        not a default."""
+        base = self.hierarchical_all_reduce(
+            bytes_per_chip, n_low, n_pods,
+            compress_ratio=compress_ratio if compressed else 1.0,
+        )
+        if not compressed or n_pods <= 1:
+            return base
+        shard = bytes_per_chip / max(n_low, 1)
+        return base + 2.0 * shard / self.quant_bw
 
     # ---------------- serving-scheduler hooks (docs/SERVING.md) ----------------
 

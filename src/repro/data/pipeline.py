@@ -59,6 +59,15 @@ class SyntheticLM:
             "targets": arr[:, 1:].astype(np.int32),
         }
 
+    def replay(self, start: int, stop: int):
+        """Deterministic skip-ahead: yield (step, batch) for steps
+        ``start .. stop-1``.  Because batch = f(seed, step), replay after a
+        fault (from the step boundary the orchestrator resumes at, or from a
+        restored checkpoint step) regenerates byte-identical batches with no
+        pipeline state to restore."""
+        for step in range(start, stop):
+            yield step, self.global_batch_arrays(step)
+
     def host_batch(self, step: int, host_id: int, n_hosts: int) -> dict[str, np.ndarray]:
         assert self.global_batch % n_hosts == 0
         per = self.global_batch // n_hosts

@@ -31,12 +31,36 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_elastic_mesh(n_devices: int | None = None, model_parallel: int | None = None):
     """Elastic re-mesh after node loss: keep the model axis fixed (sharding
     of parameters must still fit) and shrink the data axis to whatever
-    device count survives.  n_devices must be divisible by the model axis."""
+    device count survives.
+
+    An explicit ``model_parallel`` must divide ``n_devices`` exactly — a
+    remesh that silently shrank the model axis would orphan parameter
+    shards; only when ``model_parallel`` is None is the largest fitting
+    power-of-two degree auto-picked.  Invalid survivor counts raise
+    ``ValueError`` instead of building a bad mesh."""
     devices = jax.devices()
+    if n_devices is not None and n_devices <= 0:
+        raise ValueError(f"n_devices must be positive, got {n_devices}")
     n = n_devices or len(devices)
-    mp = model_parallel or min(16, n)
-    while n % mp:
-        mp //= 2
+    if n > len(devices):
+        raise ValueError(
+            f"n_devices={n} exceeds the {len(devices)} devices visible to this process"
+        )
+    if model_parallel is not None:
+        if model_parallel <= 0:
+            raise ValueError(f"model_parallel must be positive, got {model_parallel}")
+        if n % model_parallel:
+            raise ValueError(
+                f"{n} surviving devices are not divisible by model_parallel="
+                f"{model_parallel}; shrinking the model axis would orphan "
+                f"parameter shards — drop to the next multiple of "
+                f"{model_parallel} devices or re-plan with plan_remesh"
+            )
+        mp = model_parallel
+    else:
+        mp = 16
+        while mp > 1 and n % mp:
+            mp //= 2
     dp = n // mp
     return make_mesh((dp, mp), ("data", "model"), devices=devices[:n])
 

@@ -3,29 +3,52 @@
   PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
       --reduced --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/run1
 
-Production knobs: --mesh dxm (data x model on the available devices),
---microbatches N (grad accumulation), --hierarchical-sync / --compress
-(CLEX-staged gradient collectives), --resume.
+Production knobs: --mesh DxM (data x model) or PxDxM (pod x data x model,
+the CLEX hierarchy — needed for cross-pod sync tiering), --microbatches N
+(grad accumulation), --hierarchical-sync / --compress (CLEX-staged
+gradient collectives), --resume.
+
+Elastic fault-tolerant mode (docs/TRAINING.md): --orchestrate runs the
+loop under ``runtime.orchestrator.Orchestrator`` — device/pod-loss events
+remesh + reshard in memory, link degradation switches the gradient-sync
+tier (requires a PxDxM mesh + --hierarchical-sync), and checkpoints become
+an async fallback.  Without --mesh the orchestrator gets an elastic mesh
+over all visible devices.  Inject faults with --fault-schedule '<json>'
+(or @file.json), e.g.
+
+  --orchestrate --mesh 4x1 --fault-schedule \
+      '[{"step": 50, "kind": "device_loss", "devices": 2}]'
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..checkpoint.checkpointing import latest_step, restore_checkpoint, save_checkpoint
+from ..checkpoint.checkpointing import latest_intact_step, restore_checkpoint, save_checkpoint
 from ..configs.base import ARCH_IDS, ParallelConfig, get_config
 from ..data.pipeline import SyntheticLM
 from ..models import build_model
 from ..optim.adamw import AdamWConfig
 from ..runtime.fault_tolerance import StragglerMonitor
+from ..runtime.orchestrator import FaultSchedule, Orchestrator, OrchestratorConfig
 from ..runtime.trainer import Trainer
 from .jax_compat import make_mesh, use_mesh
 from .mesh import make_elastic_mesh
+
+
+def _load_schedule(arg: str) -> FaultSchedule:
+    if not arg:
+        return FaultSchedule()
+    if arg.startswith("@"):
+        with open(arg[1:]) as f:
+            spec = json.load(f)
+    else:
+        spec = json.loads(arg)
+    return FaultSchedule.from_spec(spec)
 
 
 def main() -> None:
@@ -37,21 +60,35 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--mesh", type=str, default="", help="DxM e.g. 4x2")
+    ap.add_argument("--mesh", type=str, default="",
+                    help="DxM e.g. 4x2, or PxDxM e.g. 2x2x2 for a pod axis")
     ap.add_argument("--hierarchical-sync", action="store_true")
     ap.add_argument("--compress", action="store_true", help="int8 cross-pod grad sync")
     ap.add_argument("--ckpt-dir", type=str, default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--orchestrate", action="store_true",
+                    help="elastic fault-tolerant loop (docs/TRAINING.md)")
+    ap.add_argument("--fault-schedule", type=str, default="",
+                    help="JSON list of fault events, or @path/to/file.json")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
     mesh = None
     if args.mesh:
-        dp, mp = (int(x) for x in args.mesh.split("x"))
-        mesh = make_mesh((dp, mp), ("data", "model"))
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        if len(dims) == 2:
+            mesh = make_mesh(dims, ("data", "model"))
+        elif len(dims) == 3:
+            mesh = make_mesh(dims, ("pod", "data", "model"))
+        else:
+            raise SystemExit(f"--mesh must be DxM or PxDxM, got {args.mesh!r}")
+    elif args.orchestrate:
+        # fault handling needs a mesh to remesh from; default to pure DP so
+        # any survivor count can host the model axis
+        mesh = make_elastic_mesh(model_parallel=1)
 
     pcfg = ParallelConfig(
         hierarchical_grad_sync=args.hierarchical_sync,
@@ -65,13 +102,38 @@ def main() -> None:
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M devices={len(jax.devices())}")
 
     start = 0
-    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        (params, opt), start = restore_checkpoint(args.ckpt_dir, (params, opt))
-        start += 1
-        print(f"resumed from step {start - 1}")
+    if args.resume and args.ckpt_dir:
+        last = latest_intact_step(args.ckpt_dir)
+        if last is not None:
+            (params, opt), start = restore_checkpoint(args.ckpt_dir, (params, opt),
+                                                      step=last)
+            start += 1
+            print(f"resumed from step {start - 1}")
+
+    pipe = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+
+    if args.orchestrate:
+        orch = Orchestrator(
+            model, opt_cfg, pcfg, mesh=mesh,
+            schedule=_load_schedule(args.fault_schedule),
+            cfg=OrchestratorConfig(
+                ckpt_dir=args.ckpt_dir or None,
+                ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+            ),
+            microbatches=args.microbatches,
+        )
+        params, opt, report = orch.run(params, opt, pipe, args.steps, start_step=start)
+        for line in report.log:
+            print(line, flush=True)
+        print(
+            f"orchestrated run done: {report.useful_steps} useful steps in "
+            f"{report.wall_s:.1f}s (goodput {report.goodput():.2f} steps/s), "
+            f"{len(report.remesh_events)} remesh, {len(report.sync_switches)} "
+            f"sync decisions, {report.restores} restores, final {report.final_state}"
+        )
+        return
 
     step_fn = trainer.jitted_step(donate=False)
-    pipe = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
     monitor = StragglerMonitor()
 
     with use_mesh(mesh):

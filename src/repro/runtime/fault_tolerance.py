@@ -23,7 +23,7 @@ from typing import Callable
 
 import numpy as np
 
-from ..checkpoint.checkpointing import latest_step, restore_checkpoint, save_checkpoint
+from ..checkpoint.checkpointing import latest_intact_step, restore_checkpoint, save_checkpoint
 
 __all__ = ["run_with_restarts", "StragglerMonitor", "ElasticPlan", "plan_remesh"]
 
@@ -41,8 +41,9 @@ def run_with_restarts(
     restarts = 0
     state = init_state
     step = 0
-    if latest_step(ckpt_dir) is not None:
-        state, step = restore_checkpoint(ckpt_dir, init_state)
+    last = latest_intact_step(ckpt_dir)
+    if last is not None:
+        state, step = restore_checkpoint(ckpt_dir, init_state, step=last)
         step += 1
     while step < n_steps:
         try:
@@ -54,11 +55,11 @@ def run_with_restarts(
             restarts += 1
             if restarts > max_restarts:
                 raise
-            last = latest_step(ckpt_dir)
+            last = latest_intact_step(ckpt_dir)
             if last is None:
                 state, step = init_state, 0
             else:
-                state, step = restore_checkpoint(ckpt_dir, init_state)
+                state, step = restore_checkpoint(ckpt_dir, init_state, step=last)
                 step += 1
             if on_restore is not None:
                 on_restore(restarts, step)
@@ -104,6 +105,14 @@ def plan_remesh(
     """Shrink the data axis to the surviving devices, keep the model axis
     (parameter sharding must still fit), and raise grad-accumulation so the
     global batch — and training dynamics — are unchanged."""
+    if model_parallel <= 0:
+        raise ValueError(f"model_parallel must be positive, got {model_parallel}")
+    if surviving_devices <= 0:
+        raise ValueError(f"surviving_devices must be positive, got {surviving_devices}")
+    if global_batch <= 0 or prev_dp <= 0:
+        raise ValueError(
+            f"global_batch and prev_dp must be positive, got {global_batch} / {prev_dp}"
+        )
     if surviving_devices < model_parallel:
         raise ValueError("fewer devices than the model-parallel degree; cannot re-mesh")
     dp = surviving_devices // model_parallel

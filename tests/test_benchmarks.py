@@ -53,6 +53,62 @@ def test_serving_bench_tiny_emits_wellformed_json(tmp_path):
             == on_disk["closed_ragged"]["one_shot"]["tokens"])
 
 
+def test_training_bench_tiny_emits_wellformed_json(tmp_path):
+    """training_bench --tiny drives the orchestrated and restart engines
+    through fault scenarios and writes BENCH_training.json with the goodput
+    ledger docs/TRAINING.md documents."""
+    from benchmarks.training_bench import main
+
+    results = main(["--tiny", "--steps", "6", "--ckpt-every", "2",
+                    "--scenarios", "single_device_loss,link_degradation",
+                    "--out", str(tmp_path)])
+    on_disk = json.loads((tmp_path / "BENCH_training.json").read_text())
+    assert set(on_disk) == set(results)
+    assert set(on_disk["scenarios"]) == {"single_device_loss", "link_degradation"}
+    for name, row in on_disk["scenarios"].items():
+        for eng in ("orchestrated", "baseline"):
+            stats = row[eng]
+            assert stats["useful_steps"] == 6
+            assert stats["goodput_steps_per_s"] > 0
+            assert stats["wall_s"] > 0
+        # the elastic path never restores or replays
+        assert row["orchestrated"]["restores"] == 0
+        assert row["orchestrated"]["wasted_steps"] == 0
+        assert row["goodput_ratio"] > 0
+    loss = on_disk["scenarios"]["single_device_loss"]
+    assert loss["baseline"]["restores"] == 1
+    assert loss["baseline"]["wasted_steps"] > 0  # replayed uncheckpointed work
+    assert loss["orchestrated"]["remesh_events"] == 1
+    assert not loss["modeled_comm"]
+    link = on_disk["scenarios"]["link_degradation"]
+    assert link["modeled_comm"]
+    assert link["orchestrated"]["modeled_comm_s"] > 0
+    # the degraded-tier switch makes the orchestrated modeled comm cheaper
+    assert (link["orchestrated"]["modeled_comm_s"]
+            < link["baseline"]["modeled_comm_s"])
+    assert any(s["tier"] == "compressed"
+               for s in link["orchestrated"]["sync_switches"])
+
+
+def test_make_report_syncs_bench_artifacts(tmp_path):
+    """BENCH_*.json artifacts from benchmarks/results/ are mirrored to the
+    repo root so the bench trajectory is tracked at the top level."""
+    from benchmarks.make_report import sync_bench_artifacts
+
+    res = tmp_path / "results"
+    res.mkdir()
+    (res / "BENCH_demo.json").write_text('{"goodput": 1}')
+    (res / "bench_results.json").write_text("{}")  # not a BENCH_* artifact
+    dest = tmp_path / "root"
+    dest.mkdir()
+    written = sync_bench_artifacts(str(res), str(dest))
+    assert [os.path.basename(p) for p in written] == ["BENCH_demo.json"]
+    assert json.loads((dest / "BENCH_demo.json").read_text()) == {"goodput": 1}
+    assert not (dest / "bench_results.json").exists()
+    # empty results dir is a no-op
+    assert sync_bench_artifacts(str(tmp_path / "missing"), str(dest)) == []
+
+
 def test_paper_tables_row_shape():
     from benchmarks.paper_tables import run_table
 

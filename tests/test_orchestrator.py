@@ -1,0 +1,380 @@
+"""Elastic fault-tolerant orchestrator: fault schedules, in-memory remesh +
+reshard (the canonical-partition property at the runtime layer), degraded-mode
+sync tiering, async checkpointing, and the hardened remesh planners."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.checkpoint.checkpointing import (
+    AsyncCheckpointer,
+    latest_intact_step,
+    restore_checkpoint,
+    save_checkpoint,
+    verify_checkpoint,
+)
+from repro.configs.base import ParallelConfig, get_config
+from repro.core.topology import CLEXTopology, FaultSet
+from repro.data.pipeline import SyntheticLM
+from repro.launch.jax_compat import MeshContext, make_mesh, use_mesh
+from repro.launch.mesh import make_elastic_mesh
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.fault_tolerance import plan_remesh
+from repro.runtime.orchestrator import (
+    FaultEvent,
+    FaultSchedule,
+    Orchestrator,
+    OrchestratorConfig,
+    reshard_to_mesh,
+)
+from repro.runtime.trainer import Trainer
+
+
+def _tiny_model(n_layers: int = 2):
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", remat=False, n_layers=n_layers)
+    return build_model(cfg)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return _tiny_model()
+
+
+@pytest.fixture(scope="module")
+def tiny_state(model):
+    params = model.init(jax.random.PRNGKey(7))
+    opt = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+    return params, opt
+
+
+# ------------------------------------------------------------- schedules
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="meteor_strike")
+    with pytest.raises(ValueError):
+        FaultEvent(step=-1, kind="device_loss")
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="device_loss", devices=0)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="link_degraded", bandwidth_factor=0.0)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="straggler", duration=0)
+
+
+def test_fault_schedule_from_spec_and_straggler_expansion():
+    spec = [
+        {"step": 3, "kind": "device_loss", "devices": 2},
+        {"step": 5, "kind": "straggler", "slowdown": 0.2, "duration": 3},
+        {"step": 6, "kind": "straggler", "slowdown": 0.1, "duration": 1},
+    ]
+    sched = FaultSchedule.from_spec(json.loads(json.dumps(spec)))
+    assert [e.kind for e in sched.at(3)] == ["device_loss"]
+    assert sched.at(5) == []  # stragglers are not boundary events
+    extra = sched.straggler_extra()
+    assert extra[5] == pytest.approx(0.2)
+    assert extra[6] == pytest.approx(0.2 + 0.1)
+    assert extra[7] == pytest.approx(0.2)
+    assert sched.max_step() == 6
+
+
+def test_fault_schedule_bridges_simulator_fault_set():
+    """The runtime mirror of core FaultSet: dead nodes -> proportional device
+    loss; dead top-level bundle edges -> bandwidth_factor degradation."""
+    topo = CLEXTopology(m=4, L=2)  # 16 nodes
+    faults = FaultSet.sample(topo, node_rate=0.25, edge_rate=0.125,
+                             rng=np.random.default_rng(0))
+    sched = FaultSchedule.from_fault_set(faults, at_step=5, n_devices=8)
+    kinds = {e.kind: e for e in sched.events}
+    assert kinds["device_loss"].devices == round(0.25 * 8)
+    assert kinds["device_loss"].step == 5
+    link = kinds["link_degraded"]
+    assert 0 < link.bandwidth_factor < 1
+    assert link.bandwidth_factor == pytest.approx(
+        1.0 - faults.dead_edges[topo.L].size / (topo.n * topo.m)
+    )
+    # a clean fault set produces an empty schedule
+    assert FaultSchedule.from_fault_set(FaultSet(topo), 0, 8).events == ()
+
+
+def test_schedule_beyond_run_rejected(model):
+    sched = FaultSchedule((FaultEvent(step=9, kind="device_loss"),))
+    orch = Orchestrator(model, AdamWConfig(), schedule=sched,
+                        mesh=make_mesh((2, 1), ("data", "model"),
+                                       devices=jax.devices()[:2]))
+    pipe = SyntheticLM(vocab=model.cfg.vocab, seq_len=16, global_batch=4)
+    with pytest.raises(ValueError):
+        orch.run(None, None, pipe, n_steps=5)
+
+
+def test_meshless_orchestrator_rejects_loss_events(model):
+    """No mesh to remesh from -> a clear error up front, not an
+    AttributeError 50 steps in."""
+    sched = FaultSchedule((FaultEvent(step=2, kind="device_loss"),))
+    orch = Orchestrator(model, AdamWConfig(), schedule=sched)
+    pipe = SyntheticLM(vocab=model.cfg.vocab, seq_len=16, global_batch=4)
+    with pytest.raises(ValueError, match="explicit mesh"):
+        orch.run(None, None, pipe, n_steps=5)
+
+
+# ------------------------------------------------------------- acceptance:
+# step-count equivalence of the in-memory reshard path
+def test_device_loss_matches_uninterrupted_shrunken_run(model):
+    """Orchestrated run with a mid-run device loss == uninterrupted run on
+    the shrunken mesh over the same replayed batches — the in-memory reshard
+    path loses no step, replays no step, and restores no checkpoint."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 virtual devices")
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    pipe = SyntheticLM(vocab=model.cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    n_steps, loss_at = 6, 3
+
+    mesh_big = make_mesh((4, 1), ("data", "model"), devices=jax.devices()[:4])
+    sched = FaultSchedule((FaultEvent(step=loss_at, kind="device_loss", devices=2),))
+    orch = Orchestrator(model, opt_cfg, mesh=mesh_big, schedule=sched)
+    t = Trainer(model, opt_cfg, mesh=mesh_big)
+    params, opt = t.init(jax.random.PRNGKey(0))
+    p_orch, _, report = orch.run(params, opt, pipe, n_steps)
+
+    assert report.restores == 0  # no checkpoint involved anywhere
+    assert report.useful_steps == n_steps  # no step lost or replayed
+    assert len(report.remesh_events) == 1
+    ev = report.remesh_events[0]
+    assert ev["step"] == loss_at and ev["survivors"] == 2
+    assert "data=2" in ev["mesh"]
+
+    # reference: train every step on the post-loss configuration
+    mesh_small = make_mesh((2, 1), ("data", "model"), devices=jax.devices()[:2])
+    t_ref = Trainer(model, opt_cfg, mesh=mesh_small,
+                    microbatches=ev["microbatches"])
+    params, opt = t_ref.init(jax.random.PRNGKey(0))
+    step_fn = t_ref.jitted_step(donate=False)
+    for step, raw in pipe.replay(0, n_steps):
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        with use_mesh(mesh_small):
+            params, opt, _ = step_fn(params, opt, batch)
+
+    diff = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(p_orch), jax.tree.leaves(params))
+    )
+    assert diff < 1e-4, diff
+
+
+def test_pod_loss_collapses_hierarchy(model):
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 virtual devices")
+    mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    sched = FaultSchedule((FaultEvent(step=1, kind="pod_loss", devices=1),))
+    opt_cfg = AdamWConfig(lr=1e-3, total_steps=10)
+    pcfg = ParallelConfig(hierarchical_grad_sync=True)
+    orch = Orchestrator(model, opt_cfg, pcfg, mesh=mesh3, schedule=sched)
+    t = Trainer(model, opt_cfg, pcfg, mesh=mesh3)
+    params, opt = t.init(jax.random.PRNGKey(1))
+    p, o, report = orch.run(params, opt, pipe=SyntheticLM(
+        vocab=model.cfg.vocab, seq_len=16, global_batch=8), n_steps=3)
+    ev = report.remesh_events[0]
+    assert ev["lost_devices"] == 4 and ev["survivors"] == 4
+    assert "pod" not in orch.mesh_ctx.axis_names  # hierarchy collapsed
+    assert report.final_state == "TRAINING"
+    assert np.isfinite(orch._last_metrics["loss"])
+
+
+# ------------------------------------------------------------- degraded mode
+def test_link_degradation_switches_tier_and_back(model):
+    if len(jax.devices()) < 8:
+        pytest.skip("needs 8 virtual devices")
+    mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    opt_cfg = AdamWConfig(lr=1e-3, total_steps=10)
+    pcfg = ParallelConfig(hierarchical_grad_sync=True)
+    sched = FaultSchedule((
+        FaultEvent(step=1, kind="link_degraded", bandwidth_factor=0.1),
+        FaultEvent(step=3, kind="link_restored"),
+    ))
+    orch = Orchestrator(model, opt_cfg, pcfg, mesh=mesh3, schedule=sched)
+    t = Trainer(model, opt_cfg, pcfg, mesh=mesh3)
+    params, opt = t.init(jax.random.PRNGKey(2))
+    pipe = SyntheticLM(vocab=model.cfg.vocab, seq_len=16, global_batch=8)
+    p, o, report = orch.run(params, opt, pipe, n_steps=5)
+    tiers = [(s["step"], s["tier"], s["switched"]) for s in report.sync_switches]
+    assert tiers == [(1, "compressed", True), (3, "plain", True)]
+    assert report.final_state == "TRAINING"
+    assert "err" not in o  # residual slots dropped with the compressed tier
+    assert np.isfinite(orch._last_metrics["loss"])
+
+
+def test_sync_tier_pricing(model, tiny_state):
+    """Cost-model policy: plain at nominal bandwidth (compression is a
+    repair, not a default), compressed once the top level degrades enough,
+    plain again on a mesh with no pod axis."""
+    params, _ = tiny_state
+    pcfg = ParallelConfig(hierarchical_grad_sync=True)
+    orch = Orchestrator(model, AdamWConfig(), pcfg,
+                        mesh=make_mesh((2, 2, 2), ("pod", "data", "model")))
+    nominal = orch.choose_sync_tier(params)
+    assert nominal["tier"] == "plain"
+    orch.link_factor = 0.1
+    degraded = orch.choose_sync_tier(params)
+    assert degraded["tier"] == "compressed"
+    assert degraded["t_plain_s"] > degraded["t_compressed_s"]
+    assert degraded["t_plain_s"] > nominal["t_plain_s"]
+    flat = Orchestrator(model, AdamWConfig(), pcfg,
+                        mesh=make_mesh((4, 2), ("data", "model")))
+    flat.link_factor = 0.1
+    assert flat.choose_sync_tier(params)["tier"] == "plain"
+
+
+def test_straggler_injection_flagged(model):
+    opt_cfg = AdamWConfig(lr=1e-3, total_steps=16)
+    mesh = make_mesh((2, 1), ("data", "model"), devices=jax.devices()[:2])
+    sched = FaultSchedule((
+        FaultEvent(step=9, kind="straggler", slowdown=1.0, duration=1),
+    ))
+    orch = Orchestrator(model, opt_cfg, mesh=mesh, schedule=sched)
+    t = Trainer(model, opt_cfg, mesh=mesh)
+    params, opt = t.init(jax.random.PRNGKey(3))
+    pipe = SyntheticLM(vocab=model.cfg.vocab, seq_len=16, global_batch=4)
+    _, _, report = orch.run(params, opt, pipe, n_steps=11)
+    assert 9 in report.straggler_steps
+    assert report.useful_steps == 11
+
+
+# ------------------------------------------------------------- resharding
+MESH_SHAPES = [(1, 1), (2, 1), (1, 2), (2, 2), (4, 1), (4, 2), (8, 1)]
+
+
+@given(src=st.sampled_from(MESH_SHAPES), dst=st.sampled_from(MESH_SHAPES))
+@settings(max_examples=12, deadline=None)
+def test_reshard_roundtrips_bit_exact(model, tiny_state, src, dst):
+    """In-memory resharding is pure data movement: src -> dst -> src leaves
+    every param and opt leaf bit-identical."""
+    params, opt = tiny_state
+    mesh_a = make_mesh(src, ("data", "model"), devices=jax.devices()[: src[0] * src[1]])
+    mesh_b = make_mesh(dst, ("data", "model"), devices=jax.devices()[: dst[0] * dst[1]])
+    p1, o1 = reshard_to_mesh(model, params, opt, mesh_a)
+    p2, o2 = reshard_to_mesh(model, p1, o1, mesh_b)
+    p3, o3 = reshard_to_mesh(model, p2, o2, mesh_a)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p3)):
+        assert a.dtype == b.dtype
+        assert bool(jnp.all(a == b))
+    for a, b in zip(jax.tree.leaves(opt), jax.tree.leaves(o3)):
+        assert bool(jnp.all(a == b))
+
+
+def test_reshard_drops_mesh_shaped_err_slots(model, tiny_state):
+    params, opt = tiny_state
+    opt = dict(opt, err=jax.tree.map(lambda p: jnp.zeros((2,) + p.shape), params))
+    _, o = reshard_to_mesh(model, params, opt,
+                           make_mesh((2, 1), ("data", "model"),
+                                     devices=jax.devices()[:2]))
+    assert "err" not in o
+    assert set(o) == {"step", "m", "v"}
+
+
+# ------------------------------------------------------------- hardened planners
+@given(
+    survivors=st.integers(min_value=1, max_value=64),
+    mp=st.sampled_from([1, 2, 4, 8]),
+    batch=st.sampled_from([8, 16, 24, 64]),
+)
+@settings(max_examples=60, deadline=None)
+def test_plan_remesh_properties(survivors, mp, batch):
+    """For every survivor count: the model axis is preserved, the new mesh
+    fits the survivors, and the data axis divides the global batch."""
+    if survivors < mp:
+        with pytest.raises(ValueError):
+            plan_remesh(survivors, mp, batch, prev_dp=8)
+        return
+    plan = plan_remesh(survivors, mp, batch, prev_dp=8)
+    assert plan.model_parallel == mp
+    assert plan.data_parallel >= 1
+    assert plan.data_parallel * plan.model_parallel <= survivors
+    assert batch % plan.data_parallel == 0
+    assert plan.microbatches >= 1
+    # the planned mesh is constructible whenever enough local devices exist
+    if plan.data_parallel * mp <= len(jax.devices()):
+        mesh = make_elastic_mesh(plan.data_parallel * mp, mp)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        assert sizes == {"data": plan.data_parallel, "model": mp}
+
+
+def test_plan_remesh_rejects_bad_inputs():
+    for bad in (0, -3):
+        with pytest.raises(ValueError):
+            plan_remesh(bad, 1, 8, 4)
+        with pytest.raises(ValueError):
+            plan_remesh(4, bad, 8, 4)
+    with pytest.raises(ValueError):
+        plan_remesh(4, 1, 0, 4)
+    with pytest.raises(ValueError):
+        plan_remesh(4, 1, 8, 0)
+
+
+def test_make_elastic_mesh_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        make_elastic_mesh(0)
+    with pytest.raises(ValueError):
+        make_elastic_mesh(-2)
+    with pytest.raises(ValueError):
+        make_elastic_mesh(len(jax.devices()) + 1)
+    with pytest.raises(ValueError, match="not divisible"):
+        make_elastic_mesh(6, model_parallel=4)
+    with pytest.raises(ValueError):
+        make_elastic_mesh(4, model_parallel=0)
+    # auto-pick uses the largest fitting power-of-two model degree
+    mesh = make_elastic_mesh(6)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    assert sizes == {"data": 3, "model": 2}
+
+
+# ------------------------------------------------------------- async checkpoints
+def test_async_checkpointer_writes_intact_checkpoints(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": np.arange(8, dtype=np.float32), "b": {"x": np.ones((2, 3))}}
+    with AsyncCheckpointer() as ckpt:
+        for step in range(5):
+            ckpt.save(d, step, jax.tree.map(lambda x: x + step, tree), keep=3)
+        assert len(ckpt._pending) <= 2  # double buffer bounds the queue
+    # keep=3 pruned the oldest, newest survived, all intact
+    assert latest_intact_step(d) == 4
+    for s in (2, 3, 4):
+        assert verify_checkpoint(d, s)
+    restored, step = restore_checkpoint(d, tree)
+    assert step == 4
+    np.testing.assert_array_equal(restored["w"], tree["w"] + 4)
+
+
+def test_async_checkpointer_snapshot_is_consistent(tmp_path):
+    """The host snapshot happens inside save(): mutating the live tree after
+    save() must not leak into the on-disk checkpoint."""
+    d = str(tmp_path / "ckpt")
+    tree = {"w": np.zeros(4, np.float32)}
+    with AsyncCheckpointer() as ckpt:
+        ckpt.save(d, 0, tree)  # live numpy buffers, no defensive copy
+        tree["w"][:] = 99.0
+    restored, _ = restore_checkpoint(d, tree)
+    np.testing.assert_array_equal(restored["w"], np.zeros(4, np.float32))
+
+
+def test_async_checkpointer_surfaces_write_errors(tmp_path):
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("file, not a directory")
+    ckpt = AsyncCheckpointer()
+    ckpt.save(str(blocker / "sub"), 0, {"w": np.ones(2)})
+    with pytest.raises(Exception):
+        ckpt.wait()
+    ckpt._pool.shutdown(wait=True)

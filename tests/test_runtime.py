@@ -12,7 +12,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.checkpointing import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint.checkpointing import (
+    latest_intact_step,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+    verify_checkpoint,
+)
 from repro.configs.base import ParallelConfig, get_config
 from repro.data.pipeline import SyntheticLM
 from repro.launch.jax_compat import make_mesh, use_mesh
@@ -191,6 +197,49 @@ def test_checkpoint_detects_corruption(tmp_path):
     open(data_file, "wb").write(bytes(blob))
     with pytest.raises((IOError, ValueError, Exception)):
         restore_checkpoint(d, tree)
+
+
+def test_restore_step_none_skips_damaged_newest(tmp_path):
+    """step=None restores the latest *intact* checkpoint: a crash-truncated
+    or bit-flipped newest step is skipped, an explicit step= still raises."""
+    d = str(tmp_path / "ckpt")
+    tree = {"w": np.ones(8, np.float32)}
+    for s in (1, 2, 3):
+        save_checkpoint(d, s, {"w": tree["w"] * s})
+    data_file = os.path.join(d, "step_0000000003", "arrays.npz")
+    # truncate (crash mid-write after a racy rename) rather than bit-flip
+    blob = open(data_file, "rb").read()
+    open(data_file, "wb").write(blob[: len(blob) // 2])
+    assert latest_step(d) == 3
+    assert not verify_checkpoint(d, 3)
+    assert verify_checkpoint(d, 2)
+    assert latest_intact_step(d) == 2
+    restored, step = restore_checkpoint(d, tree)
+    assert step == 2
+    np.testing.assert_array_equal(restored["w"], tree["w"] * 2)
+    with pytest.raises(Exception):
+        restore_checkpoint(d, tree, step=3)
+
+
+def test_restore_raises_when_no_intact_checkpoint(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": np.ones(4, np.float32)}
+    path = save_checkpoint(d, 0, tree)
+    os.remove(os.path.join(path, "arrays.npz"))
+    with pytest.raises(IOError):
+        restore_checkpoint(d, tree)
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "nowhere"), tree)
+
+
+def test_checkpoint_pruning_drops_oldest_first(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": np.zeros(2, np.float32)}
+    for s in (5, 1, 9, 3, 7):  # out-of-order saves
+        save_checkpoint(d, s, tree, keep=3)
+    kept = sorted(int(n[5:]) for n in os.listdir(d) if n.startswith("step_"))
+    assert kept == [5, 7, 9]  # newest three survive regardless of save order
+    assert latest_step(d) == 9
 
 
 # ---------------------------------------------------------------- fault tolerance
