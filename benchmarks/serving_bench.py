@@ -11,11 +11,21 @@ Drives two workloads against both engines and writes
   one-shot baseline must wait to fill fixed batches (batching delay) and
   decode every batch to its longest budget (head-of-line blocking), which
   is exactly what continuous batching removes.
+* ``faulted_open_poisson`` (``--fault``) — the same open-loop stream with
+  runtime faults injected mid-run (device loss; a straggling host).  The
+  orchestrated engine (``runtime/serving_elastic.py``) migrates the live
+  KV pool onto the survivor mesh and drains the straggler; the
+  restart-the-engine baseline tears the engine down on device loss and
+  resubmits every in-flight request from scratch (their generated tokens
+  are redone — wasted work), and eats a straggler's slowdown for its whole
+  duration.  Reported per scenario: useful-token goodput, p99 latency, and
+  the orchestrated/baseline ratios.
 
 Reported per engine: useful tokens/s, p50/p99 request latency, slot
 utilization (useful decode-slot steps / total decode-slot steps).
 
   PYTHONPATH=src python -m benchmarks.serving_bench --tiny
+  PYTHONPATH=src python -m benchmarks.serving_bench --fault
   PYTHONPATH=src python -m benchmarks.serving_bench --arch olmoe-1b-7b --requests 32
 
 See docs/SERVING.md for the engine knobs and metric definitions.
@@ -153,6 +163,274 @@ def _run_one_shot(model, params, prompts, budgets, n_slots, max_len, arrivals=No
     }
 
 
+def _fault_workload_stats(requests, out, rids, t0, wall_s, redone=0):
+    lat = [requests[r].t_done - (requests[r].arrival_time or t0) for r in rids]
+    tokens = sum(len(out[r]) for r in rids if r in out)
+    return {
+        "tokens": tokens,
+        "redone_tokens": redone,
+        "wall_s": wall_s,
+        "goodput_tokens_per_s": tokens / wall_s if wall_s > 0 else 0.0,
+        "latency_p50_s": _percentile(lat, 50),
+        "latency_p99_s": _percentile(lat, 99),
+    }
+
+
+def _run_orchestrated_faulted(model, params, prompts, budgets, n_slots, max_len,
+                              policy, arrivals, spec):
+    """Elastic path: ServingOrchestrator migrates live KV slots / drains the
+    straggler; in-flight tokens are never redone."""
+    from repro.launch.mesh import make_elastic_mesh
+    from repro.runtime.orchestrator import FaultSchedule
+    from repro.runtime.serving import ContinuousBatchingEngine
+    from repro.runtime.serving_elastic import (
+        ServingOrchestrator,
+        ServingOrchestratorConfig,
+    )
+    from repro.runtime.sharding import reshard_params
+
+    mesh = make_elastic_mesh(model_parallel=1)
+    sched = FaultSchedule.from_spec(spec, n_devices=int(mesh.devices.size))
+    engine = ContinuousBatchingEngine(
+        model, reshard_params(model.param_axes(), params, mesh),
+        n_slots=n_slots, max_len=max_len, policy=policy, mesh=mesh,
+    )
+    # pool size held constant across the fault (both paths): the visited
+    # engine configurations stay deterministic run-to-run, so the warm pass
+    # really does keep compiles off the clock
+    orch = ServingOrchestrator(engine, sched,
+                               ServingOrchestratorConfig(shrink_pool=False))
+    t0 = time.monotonic()
+    rids = [
+        engine.submit(p, b, arrival_time=t0 + arrivals[i])
+        for i, (p, b) in enumerate(zip(prompts, budgets))
+    ]
+    out = orch.run()
+    wall = time.monotonic() - t0
+    stats = _fault_workload_stats(engine.requests, out, rids, t0, wall)
+    stats.update(
+        engine="orchestrated",
+        migrations=len(orch.report.migrations),
+        straggler_drains=len(orch.report.drains),
+        injected_slow_s=orch.report.injected_slow_s,
+        slow_s_avoided=orch.report.slow_s_avoided,
+        mesh_history=[m for _, m in orch.report.mesh_history],
+    )
+    return stats
+
+
+def _run_restart_faulted(model, params, prompts, budgets, n_slots, max_len,
+                         policy, arrivals, spec):
+    """Baseline: on device loss the engine is torn down and rebuilt on the
+    survivor mesh; unfinished requests are resubmitted from scratch, redoing
+    every token they had already generated.  A straggler is never drained —
+    its slowdown applies for the event's whole duration."""
+    from repro.launch.mesh import make_elastic_mesh
+    from repro.runtime.orchestrator import FaultSchedule
+    from repro.runtime.serving import ContinuousBatchingEngine
+    from repro.runtime.sharding import reshard_params
+
+    mesh = make_elastic_mesh(model_parallel=1)
+    total = int(mesh.devices.size)
+    sched = FaultSchedule.from_spec(spec, n_devices=total)
+    loss_at: dict = {}  # step -> events (same-step events all fire)
+    for e in sched.events:
+        if e.kind in ("device_loss", "pod_loss"):
+            loss_at.setdefault(e.step, []).append(e)
+    slow = {}  # step -> injected seconds (stragglers run their full course)
+    for e in sched.events:
+        if e.kind == "straggler":
+            for s in range(e.step, e.step + e.duration):
+                slow[s] = slow.get(s, 0.0) + e.slowdown
+
+    def build(n_dev, n_slots_now):
+        m = make_elastic_mesh(n_dev, 1)
+        return ContinuousBatchingEngine(
+            model, reshard_params(model.param_axes(), params, m),
+            n_slots=n_slots_now, max_len=max_len, policy=policy, mesh=m,
+        )
+
+    engine = build(total, n_slots)
+    t0 = time.monotonic()
+    rid_of = {}  # original workload index -> rid in the *current* engine
+    for i, (p, b) in enumerate(zip(prompts, budgets)):
+        rid_of[i] = engine.submit(p, b, arrival_time=t0 + arrivals[i])
+    outputs, latencies, redone = {}, {}, 0
+    survivors = total
+    step = 0
+    while any(not engine.requests[r].done for r in rid_of.values()):
+        evs = loss_at.pop(step, None)  # pop: idle rounds must not re-fire
+        if evs is not None:
+            survivors -= sum(e.devices for e in evs)
+            # restart: every in-flight/queued request loses its progress;
+            # completed ones are harvested and dropped from the live map
+            unfinished = [
+                (i, engine.requests[r]) for i, r in rid_of.items()
+                if not engine.requests[r].done
+            ]
+            for i, r in rid_of.items():
+                req = engine.requests[r]
+                if req.done and i not in outputs:
+                    outputs[i] = np.asarray(req.tokens_out, np.int32)
+                    latencies[i] = req.t_done - (req.arrival_time or t0)
+            redone += sum(len(req.tokens_out) for _, req in unfinished)
+            # same pool policy as the orchestrated path: size held constant
+            # across the fault (deterministic configurations, warm compiles)
+            engine = build(survivors, n_slots)
+            rid_of = {  # old-engine rids are dead; track only resubmissions
+                i: engine.submit(req.prompt, req.max_new_tokens,
+                                 arrival_time=req.arrival_time)
+                for i, req in unfinished
+            }
+        made = engine.step(time.monotonic())
+        if made == 0:
+            # idle round: fault steps count scheduling rounds that did work
+            # (same semantics as the orchestrated path)
+            nxt = engine.queue.next_arrival()
+            if nxt is not None and time.monotonic() < nxt:
+                time.sleep(min(1e-3, max(nxt - time.monotonic(), 0.0)))
+            continue
+        if slow.get(step):
+            time.sleep(slow[step])
+        step += 1
+    wall = time.monotonic() - t0
+    for i, r in rid_of.items():
+        req = engine.requests[r]
+        if i not in outputs:
+            outputs[i] = np.asarray(req.tokens_out, np.int32)
+            latencies[i] = req.t_done - (req.arrival_time or t0)
+    lat = [latencies[i] for i in sorted(latencies)]
+    tokens = sum(len(v) for v in outputs.values())
+    return {
+        "engine": "restart",
+        "tokens": tokens,
+        "redone_tokens": redone,
+        "wall_s": wall,
+        "goodput_tokens_per_s": tokens / wall if wall > 0 else 0.0,
+        "latency_p50_s": _percentile(lat, 50),
+        "latency_p99_s": _percentile(lat, 99),
+    }
+
+
+def _warm_fault_configs(model, params, spec, n_slots, max_len, policy,
+                        total, prompt_len):
+    """Deterministically compile every engine configuration a scenario can
+    visit (each survivor mesh x every pow2 admission-group shape x decode)
+    into the serving jit cache, off the clock.  Both paths then measure
+    serving + migration data movement + redone work, not XLA compile."""
+    from repro.launch.mesh import make_elastic_mesh
+    from repro.runtime.serving import ContinuousBatchingEngine
+    from repro.runtime.sharding import reshard_params
+
+    # bench meshes are flat (model_parallel=1, no pod axis), so pod_loss
+    # specs are rejected by the orchestrator up front — only device losses
+    # and straggler drains (chip-count semantics) shrink the machine here
+    survivors, s = [total], total
+    for e in sorted(spec, key=lambda x: x["step"]):
+        if e["kind"] in ("device_loss", "straggler"):
+            s -= e.get("devices", 1)
+            survivors.append(s)
+    for n_dev in survivors:
+        mesh = make_elastic_mesh(n_dev, 1)
+        eng = ContinuousBatchingEngine(
+            model, reshard_params(model.param_axes(), params, mesh),
+            n_slots=n_slots, max_len=max_len, policy=policy, mesh=mesh,
+        )
+        g = 1
+        while g <= n_slots:
+            for _ in range(g):
+                eng.submit(np.ones((prompt_len,), np.int32), 2)
+            eng.run()
+            g *= 2
+
+
+def _run_faulted_scenarios(model, params, prompts, budgets, args, max_len,
+                           arrivals, slots):
+    """Both engines through each fault scenario; returns the bench rows."""
+    import jax
+
+    total = len(jax.devices())
+    # faults land mid-stream (steps ~= total tokens / slots)
+    est = max(4, sum(budgets) // max(slots, 1))
+    if args.tiny:
+        scenarios = {
+            "device_loss": [
+                {"step": est // 2, "kind": "device_loss",
+                 "devices": max(1, total // 2)}
+            ],
+            "straggler": [
+                {"step": max(1, est // 4), "kind": "straggler",
+                 "slowdown": 0.02, "duration": 8, "devices": 1}
+            ],
+        }
+    else:
+        scenarios = {
+            # two-stage loss: the baseline restarts (and redoes every
+            # in-flight token) twice; the orchestrator migrates twice
+            "device_loss": [
+                {"step": int(est * 0.45), "kind": "device_loss",
+                 "devices": max(1, total // 4)},
+                {"step": int(est * 0.75), "kind": "device_loss",
+                 "devices": max(1, total // 4)},
+            ],
+            # a long straggler: the baseline eats the slowdown for the whole
+            # duration; the orchestrator drains the slow host after patience
+            "straggler": [
+                {"step": max(1, est // 3), "kind": "straggler",
+                 "slowdown": 0.1, "duration": 60, "devices": 1}
+            ],
+        }
+    rows = {}
+    for name, spec in scenarios.items():
+        run_args = (model, params, prompts, budgets, slots, max_len,
+                    args.policy, arrivals)
+        if args.tiny:
+            orch = _run_orchestrated_faulted(*run_args, spec)
+            base = _run_restart_faulted(*run_args, spec)
+        else:
+            _warm_fault_configs(model, params, spec, slots, max_len,
+                                args.policy, total, len(prompts[0]))
+            # warm both flows once (any shape the config warmer missed),
+            # then interleave repetitions and keep each path's median-wall
+            # run — wall-clock noise (CPU throttling, allocator warmup)
+            # hits both paths alike instead of whichever ran last
+            warm = [dict(e, slowdown=0.0) if e["kind"] == "straggler" else e
+                    for e in spec]
+            _run_orchestrated_faulted(*run_args, warm)
+            _run_restart_faulted(*run_args, warm)
+            reps = [
+                (_run_orchestrated_faulted(*run_args, spec),
+                 _run_restart_faulted(*run_args, spec))
+                for _ in range(3)
+            ]
+            orch = sorted((r[0] for r in reps),
+                          key=lambda s: s["wall_s"])[1]
+            base = sorted((r[1] for r in reps),
+                          key=lambda s: s["wall_s"])[1]
+        rows[name] = {
+            "schedule": spec,
+            "orchestrated": orch,
+            "restart": base,
+            "goodput_ratio": (
+                orch["goodput_tokens_per_s"] / base["goodput_tokens_per_s"]
+                if base["goodput_tokens_per_s"] else 0.0
+            ),
+            "p99_ratio": (
+                base["latency_p99_s"] / orch["latency_p99_s"]
+                if orch["latency_p99_s"] else 0.0
+            ),
+        }
+        print(
+            f"faulted/{name}: orchestrated {orch['goodput_tokens_per_s']:.1f} "
+            f"tok/s p99 {orch['latency_p99_s']:.2f}s vs restart "
+            f"{base['goodput_tokens_per_s']:.1f} tok/s p99 "
+            f"{base['latency_p99_s']:.2f}s — goodput x"
+            f"{rows[name]['goodput_ratio']:.2f}, p99 x{rows[name]['p99_ratio']:.2f} "
+            f"(baseline redid {base['redone_tokens']} tokens)"
+        )
+    return rows
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -166,8 +444,15 @@ def main(argv=None) -> dict:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--policy", choices=["fcfs", "cost_aware"], default="cost_aware")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault", action="store_true",
+                    help="add the faulted open-loop scenarios (elastic "
+                         "orchestrated serving vs engine-restart baseline)")
+    ap.add_argument("--fault-only", action="store_true",
+                    help="run only the faulted scenarios (implies --fault)")
     ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "results"))
     args = ap.parse_args(argv)
+    if args.fault_only:
+        args.fault = True
 
     os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
     import jax
@@ -205,44 +490,78 @@ def main(argv=None) -> dict:
         }
     }
 
-    # ---- closed-loop: everything arrives at t=0
-    cont = _run_continuous(model, params, prompts, budgets, args.slots, max_len, args.policy)
-    base = _run_one_shot(model, params, prompts, budgets, args.slots, max_len)
-    results["closed_ragged"] = {
-        "continuous": cont,
-        "one_shot": base,
-        "speedup_tokens_per_s": cont["tokens_per_s"] / base["tokens_per_s"]
-        if base["tokens_per_s"]
-        else 0.0,
-    }
+    if not args.fault_only:
+        # ---- closed-loop: everything arrives at t=0
+        cont = _run_continuous(model, params, prompts, budgets, args.slots, max_len, args.policy)
+        base = _run_one_shot(model, params, prompts, budgets, args.slots, max_len)
+        results["closed_ragged"] = {
+            "continuous": cont,
+            "one_shot": base,
+            "speedup_tokens_per_s": cont["tokens_per_s"] / base["tokens_per_s"]
+            if base["tokens_per_s"]
+            else 0.0,
+        }
 
-    # ---- open-loop: Poisson arrivals at ~110% of the continuous engine's
-    # measured service rate — saturating, so each engine's tokens/s is its
-    # sustainable capacity and queueing delay shows up in p99
-    svc_req_per_s = args.requests / cont["wall_s"] if cont["wall_s"] > 0 else 10.0
-    rate = 1.1 * svc_req_per_s
-    gaps = rng.exponential(1.0 / rate, args.requests)
-    arrivals = np.cumsum(gaps).tolist()
-    cont_o = _run_continuous(
-        model, params, prompts, budgets, args.slots, max_len, args.policy, arrivals=arrivals
-    )
-    base_o = _run_one_shot(
-        model, params, prompts, budgets, args.slots, max_len, arrivals=arrivals
-    )
-    results["open_poisson"] = {
-        "arrival_rate_req_per_s": rate,
-        "continuous": cont_o,
-        "one_shot": base_o,
-        "speedup_tokens_per_s": cont_o["tokens_per_s"] / base_o["tokens_per_s"]
-        if base_o["tokens_per_s"]
-        else 0.0,
-    }
+        # ---- open-loop: Poisson arrivals at ~110% of the continuous engine's
+        # measured service rate — saturating, so each engine's tokens/s is its
+        # sustainable capacity and queueing delay shows up in p99
+        svc_req_per_s = args.requests / cont["wall_s"] if cont["wall_s"] > 0 else 10.0
+        rate = 1.1 * svc_req_per_s
+        gaps = rng.exponential(1.0 / rate, args.requests)
+        arrivals = np.cumsum(gaps).tolist()
+        cont_o = _run_continuous(
+            model, params, prompts, budgets, args.slots, max_len, args.policy, arrivals=arrivals
+        )
+        base_o = _run_one_shot(
+            model, params, prompts, budgets, args.slots, max_len, arrivals=arrivals
+        )
+        results["open_poisson"] = {
+            "arrival_rate_req_per_s": rate,
+            "continuous": cont_o,
+            "one_shot": base_o,
+            "speedup_tokens_per_s": cont_o["tokens_per_s"] / base_o["tokens_per_s"]
+            if base_o["tokens_per_s"]
+            else 0.0,
+        }
+
+    if args.fault:
+        # ---- faulted open-loop: elastic orchestrated serving vs the
+        # restart-the-engine baseline under identical fault schedules.
+        # Budgets run longer than the base workload so a mid-run fault
+        # catches substantial in-flight progress (that progress is exactly
+        # what the restart baseline has to redo).
+        # arrivals must outpace the (compile-warm) service rate so the pool
+        # stays saturated — a mid-run fault then catches real in-flight work
+        gap = 0.05 if args.tiny else 0.02
+        fb_lo, fb_hi = (budget_lo, budget_hi) if args.tiny else (16, 48)
+        fslots = args.slots if args.tiny else args.slots + 2
+        # fixed prompt length (one bucket): the comparison measures redone
+        # work and drain benefit, not prefill-shape compile noise
+        fprompts, fbudgets = _workload(
+            rng, args.requests, prompt_hi, prompt_hi, fb_lo, fb_hi, cfg.vocab
+        )
+        fmax_len = prompt_hi + fb_hi + 8
+        fault_arrivals = np.cumsum(
+            rng.exponential(gap, args.requests)
+        ).tolist()
+        results["faulted_open_poisson"] = {
+            "arrival_mean_gap_s": gap,
+            "new_tokens": [fb_lo, fb_hi],
+            "prompt_len": prompt_hi,
+            "slots": fslots,
+            "scenarios": _run_faulted_scenarios(
+                model, params, fprompts, fbudgets, args, fmax_len,
+                fault_arrivals, fslots
+            ),
+        }
 
     os.makedirs(args.out, exist_ok=True)
     out_path = os.path.join(args.out, "BENCH_serving.json")
     with open(out_path, "w") as f:
         json.dump(results, f, indent=1)
     for wl in ("closed_ragged", "open_poisson"):
+        if wl not in results:
+            continue
         row = results[wl]
         print(
             f"{wl}: continuous {row['continuous']['tokens_per_s']:.1f} tok/s "
@@ -254,6 +573,18 @@ def main(argv=None) -> dict:
             f"speedup {row['speedup_tokens_per_s']:.2f}x"
         )
     print(f"wrote {out_path}")
+    # sync the repo-root copy only for full-scale complete runs: a --tiny or
+    # --fault-only smoke must never overwrite the committed default-scale
+    # artifact with partial rows
+    if (
+        not args.tiny
+        and not args.fault_only
+        and os.path.abspath(args.out)
+        == os.path.abspath(os.path.join(os.path.dirname(__file__), "results"))
+    ):
+        from benchmarks.make_report import sync_bench_artifacts
+
+        sync_bench_artifacts()
     return results
 
 

@@ -19,7 +19,29 @@ import jax
 
 from .jax_compat import make_mesh
 
-__all__ = ["make_production_mesh", "make_elastic_mesh", "dp_axes", "mesh_axis_sizes"]
+__all__ = [
+    "make_production_mesh",
+    "make_elastic_mesh",
+    "parse_mesh_flag",
+    "dp_axes",
+    "mesh_axis_sizes",
+]
+
+
+def parse_mesh_flag(value: str):
+    """Parse the launchers' ``--mesh`` knob: ``DxM`` (data x model) or
+    ``PxDxM`` (pod x data x model, the CLEX hierarchy).  Shared by
+    ``launch/train.py`` and ``launch/serve.py``; raises ``SystemExit`` with
+    the usage message on malformed input."""
+    try:
+        dims = tuple(int(x) for x in value.split("x"))
+    except ValueError:
+        dims = ()
+    if len(dims) == 2:
+        return make_mesh(dims, ("data", "model"))
+    if len(dims) == 3:
+        return make_mesh(dims, ("pod", "data", "model"))
+    raise SystemExit(f"--mesh must be DxM or PxDxM, got {value!r}")
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -11,6 +11,17 @@ Continuous mode submits a ragged closed-loop workload (prompt lengths and
 token budgets jittered around --prompt-len/--new-tokens), serves it through
 the pooled-KV scheduler, and reports tokens/s plus slot utilization.  See
 docs/SERVING.md for the scheduler/KV-pool knobs.
+
+Elastic fault-tolerant mode (docs/SERVING.md, elasticity section — the
+serving mirror of ``launch/train.py --orchestrate``): --orchestrate runs
+the engine under ``runtime.serving_elastic.ServingOrchestrator`` —
+device/pod-loss events migrate the live KV pool onto the survivor mesh,
+stragglers are drained, link degradation re-prices admission.  Without
+--mesh the engine gets an elastic mesh over all visible devices.  Inject
+faults with --fault-schedule '<json>' (or @file.json), e.g.
+
+  --orchestrate --fault-schedule \
+      '[{"step": 20, "kind": "device_loss", "devices": 2}]'
 """
 
 from __future__ import annotations
@@ -23,7 +34,11 @@ import numpy as np
 
 from ..configs.base import ARCH_IDS, get_config
 from ..models import build_model
+from ..runtime.orchestrator import load_schedule
 from ..runtime.serving import ContinuousBatchingEngine, ServingEngine
+from ..runtime.serving_elastic import ServingOrchestrator
+from ..runtime.sharding import reshard_params
+from .mesh import make_elastic_mesh, parse_mesh_flag
 
 
 def main() -> None:
@@ -40,6 +55,15 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mesh", type=str, default="",
+                    help="DxM e.g. 4x1, or PxDxM for a pod axis (orchestrated mode)")
+    ap.add_argument("--orchestrate", action="store_true",
+                    help="elastic fault-tolerant serving (docs/SERVING.md)")
+    ap.add_argument("--fault-schedule", type=str, default="",
+                    help="JSON list of fault events, or @path/to/file.json "
+                         "(events are keyed by engine step)")
+    ap.add_argument("--open-rate", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0 = closed loop)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -59,23 +83,57 @@ def main() -> None:
             print("  ", row.tolist())
         return
 
+    mesh = None
+    if args.mesh:
+        mesh = parse_mesh_flag(args.mesh)
+    elif args.orchestrate:
+        # fault handling needs a mesh to remesh from; default to pure DP so
+        # any survivor count can host the model axis
+        mesh = make_elastic_mesh(model_parallel=1)
+    if mesh is not None:
+        params = reshard_params(model.param_axes(), params, mesh)
+
     max_len = args.prompt_len + args.new_tokens + 8
     engine = ContinuousBatchingEngine(
-        model, params, n_slots=args.slots, max_len=max_len, policy=args.policy
+        model, params, n_slots=args.slots, max_len=max_len, policy=args.policy,
+        mesh=mesh,
     )
     lens = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1, args.requests)
     budgets = rng.integers(max(args.new_tokens // 4, 1), args.new_tokens + 1, args.requests)
+    arrivals = None
+    if args.open_rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.open_rate, args.requests))
+
     t0 = time.time()
+    base = time.monotonic()
     rids = [
         engine.submit(
             rng.integers(1, cfg.vocab, (int(l),)).astype(np.int32),
             int(b),
             temperature=args.temperature,
+            arrival_time=None if arrivals is None else base + float(arrivals[i]),
         )
-        for l, b in zip(lens, budgets)
+        for i, (l, b) in enumerate(zip(lens, budgets))
     ]
-    out = engine.run()
-    dt = time.time() - t0
+
+    if args.orchestrate:
+        orch = ServingOrchestrator(engine, load_schedule(args.fault_schedule))
+        out = orch.run()
+        dt = time.time() - t0
+        report = orch.report
+        for line in report.log:
+            print(line, flush=True)
+        print(
+            f"orchestrated serving done: {report.tokens} tokens in "
+            f"{report.wall_s:.2f}s (goodput {report.goodput():.1f} tok/s), "
+            f"{len(report.migrations)} migrations ({len(report.drains)} "
+            f"straggler drains), {len(report.repricings)} repricings, "
+            f"final {report.final_state}"
+        )
+    else:
+        out = engine.run()
+        dt = time.time() - t0
+
     toks = sum(len(out[r]) for r in rids)
     m = engine.metrics
     print(
@@ -83,7 +141,7 @@ def main() -> None:
         f"({toks/dt:.1f} tok/s incl. compile)"
     )
     print(
-        f"slots={args.slots} policy={args.policy} decode_steps={m.decode_steps} "
+        f"slots={engine.pool.n_slots} policy={args.policy} decode_steps={m.decode_steps} "
         f"prefills={m.prefills} slot_utilization={m.slot_utilization:.2f} "
         f"pool_evictions={engine.pool.n_evict}"
     )

@@ -23,7 +23,6 @@ over all visible devices.  Inject faults with --fault-schedule '<json>'
 from __future__ import annotations
 
 import argparse
-import json
 
 import jax
 import jax.numpy as jnp
@@ -34,21 +33,10 @@ from ..data.pipeline import SyntheticLM
 from ..models import build_model
 from ..optim.adamw import AdamWConfig
 from ..runtime.fault_tolerance import StragglerMonitor
-from ..runtime.orchestrator import FaultSchedule, Orchestrator, OrchestratorConfig
+from ..runtime.orchestrator import Orchestrator, OrchestratorConfig, load_schedule
 from ..runtime.trainer import Trainer
-from .jax_compat import make_mesh, use_mesh
-from .mesh import make_elastic_mesh
-
-
-def _load_schedule(arg: str) -> FaultSchedule:
-    if not arg:
-        return FaultSchedule()
-    if arg.startswith("@"):
-        with open(arg[1:]) as f:
-            spec = json.load(f)
-    else:
-        spec = json.loads(arg)
-    return FaultSchedule.from_spec(spec)
+from .jax_compat import use_mesh
+from .mesh import make_elastic_mesh, parse_mesh_flag
 
 
 def main() -> None:
@@ -78,13 +66,7 @@ def main() -> None:
     model = build_model(cfg)
     mesh = None
     if args.mesh:
-        dims = tuple(int(x) for x in args.mesh.split("x"))
-        if len(dims) == 2:
-            mesh = make_mesh(dims, ("data", "model"))
-        elif len(dims) == 3:
-            mesh = make_mesh(dims, ("pod", "data", "model"))
-        else:
-            raise SystemExit(f"--mesh must be DxM or PxDxM, got {args.mesh!r}")
+        mesh = parse_mesh_flag(args.mesh)
     elif args.orchestrate:
         # fault handling needs a mesh to remesh from; default to pure DP so
         # any survivor count can host the model axis
@@ -115,7 +97,7 @@ def main() -> None:
     if args.orchestrate:
         orch = Orchestrator(
             model, opt_cfg, pcfg, mesh=mesh,
-            schedule=_load_schedule(args.fault_schedule),
+            schedule=load_schedule(args.fault_schedule),
             cfg=OrchestratorConfig(
                 ckpt_dir=args.ckpt_dir or None,
                 ckpt_every=args.ckpt_every if args.ckpt_dir else 0,

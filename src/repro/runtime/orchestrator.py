@@ -27,8 +27,12 @@ twin of ``runtime/serving.py`` on the serving side):
     only when the degraded plain-tier cost exceeds ``switch_threshold``
     times its fault-free cost, and drops it again on ``link_restored``.
   - **stragglers** → per-step slowdown injection, flagged by
-    :class:`~repro.runtime.fault_tolerance.StragglerMonitor` and surfaced
-    in the report (goodput accounting; drain/replace is a fleet concern).
+    :class:`~repro.runtime.fault_tolerance.StragglerMonitor`; with
+    ``drain_stragglers`` on, the slow host is drained after
+    ``straggler_patience`` slowed steps — remesh away from its chips
+    through the same device-loss path, trading capacity for speed (the
+    serving twin in ``runtime/serving_elastic.py`` drains live KV slots
+    the same way).
 
   The fallback path is the async double-buffered checkpointer
   (``checkpoint/checkpointing.py``); ``benchmarks/training_bench.py``
@@ -65,6 +69,7 @@ __all__ = [
     "OrchestratorConfig",
     "OrchestratorReport",
     "Orchestrator",
+    "load_schedule",
     "reshard_to_mesh",
 ]
 
@@ -119,10 +124,74 @@ class FaultSchedule:
         object.__setattr__(self, "events", tuple(self.events))
 
     @classmethod
-    def from_spec(cls, spec) -> "FaultSchedule":
+    def from_spec(
+        cls,
+        spec,
+        n_devices: int | None = None,
+        model_parallel: int = 1,
+        n_pods: int = 1,
+    ) -> "FaultSchedule":
         """Build from a list of dicts (the ``--fault-schedule`` JSON knob):
-        ``[{"step": 5, "kind": "device_loss", "devices": 2}, ...]``."""
-        return cls(tuple(FaultEvent(**item) for item in spec))
+        ``[{"step": 5, "kind": "device_loss", "devices": 2}, ...]``.
+
+        When ``n_devices`` is given the schedule is validated against that
+        machine up front (:meth:`validate`) so an event targeting devices or
+        pods that do not exist fails with a clear ``ValueError`` at parse
+        time instead of deep inside a remesh."""
+        sched = cls(tuple(FaultEvent(**item) for item in spec))
+        if n_devices is not None:
+            sched.validate(n_devices, model_parallel=model_parallel, n_pods=n_pods)
+        return sched
+
+    def validate(
+        self, n_devices: int, model_parallel: int = 1, n_pods: int = 1
+    ) -> "FaultSchedule":
+        """Check every loss/drain event against the machine it will run on,
+        tracking cumulative survivors in step order: an event that targets
+        more devices or pods than remain (or that would leave fewer chips
+        than the model-parallel degree needs) raises ``ValueError`` here,
+        not ``plan_remesh``-deep at fault time."""
+        if n_devices <= 0:
+            raise ValueError(f"n_devices must be positive, got {n_devices}")
+        survivors, pods = n_devices, max(n_pods, 1)
+        pod_size = n_devices // max(n_pods, 1)
+        for ev in sorted(self.events, key=lambda e: e.step):
+            if ev.kind == "device_loss":
+                lost = ev.devices
+                if lost >= survivors:
+                    raise ValueError(
+                        f"step {ev.step}: device_loss of {lost} targets "
+                        f"nonexistent devices — only {survivors} remain"
+                    )
+            elif ev.kind == "pod_loss":
+                if ev.devices >= pods:
+                    raise ValueError(
+                        f"step {ev.step}: pod_loss of {ev.devices} targets "
+                        f"nonexistent pods — only {pods} remain"
+                    )
+                pods -= ev.devices
+                lost = ev.devices * pod_size
+            elif ev.kind == "straggler":
+                if ev.devices >= survivors:
+                    raise ValueError(
+                        f"step {ev.step}: straggler on {ev.devices} devices "
+                        f"targets nonexistent devices — only {survivors} remain "
+                        f"(draining them would leave no machine)"
+                    )
+                # charge the drain: the serving orchestrator always drains,
+                # and training may (drain_stragglers) — validating as-if-
+                # drained keeps a passing schedule safe on every path
+                lost = ev.devices
+            else:
+                continue
+            if survivors - lost < model_parallel:
+                raise ValueError(
+                    f"step {ev.step}: {ev.kind} leaves {survivors - lost} "
+                    f"devices, fewer than model_parallel={model_parallel} — "
+                    f"the parameter shards would have no home"
+                )
+            survivors -= lost
+        return self
 
     @classmethod
     def from_fault_set(cls, faults, at_step: int, n_devices: int) -> "FaultSchedule":
@@ -149,6 +218,9 @@ class FaultSchedule:
     def at(self, step: int):
         return [e for e in self.events if e.step == step and e.kind != "straggler"]
 
+    def stragglers_at(self, step: int):
+        return [e for e in self.events if e.step == step and e.kind == "straggler"]
+
     def straggler_extra(self) -> dict:
         """step -> injected extra seconds, expanded over event durations."""
         extra: dict = {}
@@ -160,6 +232,55 @@ class FaultSchedule:
 
     def max_step(self) -> int:
         return max((e.step for e in self.events), default=-1)
+
+
+class StragglerLedger:
+    """Live straggler bookkeeping shared by the training and serving
+    orchestrators: activate events as their step arrives, tick once per
+    productive step (returns the injected seconds), and surface entries
+    that have outstayed the drain patience."""
+
+    def __init__(self):
+        self._entries: list[list] = []  # [event, remaining steps, age]
+
+    def activate(self, ev: FaultEvent) -> None:
+        self._entries.append([ev, ev.duration, 0])
+
+    def tick(self) -> float:
+        """Seconds of slowdown this step injects; ages every active entry."""
+        slow = sum(ev.slowdown for ev, left, _ in self._entries if left > 0)
+        for entry in self._entries:
+            if entry[1] > 0:
+                entry[1] -= 1
+                entry[2] += 1
+        return slow
+
+    def drainable(self, patience: int) -> list[list]:
+        """Entries still slowing things down after ``patience`` steps."""
+        return [e for e in self._entries if e[1] > 0 and e[2] >= patience]
+
+    @staticmethod
+    def cancel(entry: list) -> float:
+        """Stop an entry (its host was drained); returns seconds avoided."""
+        avoided = entry[0].slowdown * entry[1]
+        entry[1] = 0
+        return avoided
+
+
+def load_schedule(arg: str) -> FaultSchedule:
+    """Parse the launchers' ``--fault-schedule`` knob: inline JSON, or
+    ``@path/to/file.json`` (shared by ``launch/train.py`` and
+    ``launch/serve.py``)."""
+    import json
+
+    if not arg:
+        return FaultSchedule()
+    if arg.startswith("@"):
+        with open(arg[1:]) as f:
+            spec = json.load(f)
+    else:
+        spec = json.loads(arg)
+    return FaultSchedule.from_spec(spec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,7 +295,12 @@ class OrchestratorConfig:
       the compressed tier is cheaper);
     * ``grad_bytes_per_param`` — wire bytes per parameter for pricing (fp32
       gradients = 4.0);
-    * ``donate`` — donate params/opt buffers to the jitted step.
+    * ``donate`` — donate params/opt buffers to the jitted step;
+    * ``drain_stragglers``/``straggler_patience`` — after ``patience``
+      slowed steps, drain the slow host: remesh away its chips through the
+      device-loss path (docs/TRAINING.md) instead of eating the slowdown
+      for the event's whole duration.  Off by default: draining trades
+      capacity for speed, a policy call.
     """
 
     ckpt_dir: str | None = None
@@ -185,6 +311,8 @@ class OrchestratorConfig:
     grad_bytes_per_param: float = 4.0
     compress_ratio: float = 0.26
     switch_threshold: float = 1.5
+    drain_stragglers: bool = False
+    straggler_patience: int = 2
 
 
 @dataclasses.dataclass
@@ -197,6 +325,9 @@ class OrchestratorReport:
     remesh_events: list = dataclasses.field(default_factory=list)
     sync_switches: list = dataclasses.field(default_factory=list)
     straggler_steps: list = dataclasses.field(default_factory=list)
+    straggler_drains: list = dataclasses.field(default_factory=list)
+    injected_slow_s: float = 0.0  # straggler seconds actually eaten
+    slow_s_avoided: float = 0.0  # straggler seconds a drain cut short
     mesh_history: list = dataclasses.field(default_factory=list)
     log: list = dataclasses.field(default_factory=list)
     final_state: str = "TRAINING"
@@ -218,7 +349,7 @@ def reshard_to_mesh(model, params, opt_state, mesh):
     ctx = jax_compat.MeshContext.from_any(mesh)
     psh = shd.param_shardings(model.param_axes(), ctx.mesh, params)
     put = lambda tree, sh: jax.tree.map(lambda x, s: jax.device_put(x, s), tree, sh)
-    new_params = put(params, psh)
+    new_params = put(params, psh)  # psh in hand; serving uses reshard_params
     osh = shd.opt_state_shardings(psh, ctx.mesh)
     new_opt = {k: v for k, v in opt_state.items() if k != "err"}
     new_opt["step"] = jax.device_put(opt_state["step"], osh["step"])
@@ -251,9 +382,23 @@ class Orchestrator:
         self.base_pcfg = pcfg
         self.pcfg = pcfg
         self.mesh_ctx = jax_compat.MeshContext.from_any(mesh)
+        if self.mesh_ctx is not None:
+            schedule.validate(
+                int(self.mesh_ctx.mesh.devices.size),
+                model_parallel=self.mesh_ctx.model_size(),
+                n_pods=self.mesh_ctx.axis_size("pod", 1),
+            )
         self.schedule = schedule
         self.cfg = cfg
         self.microbatches = microbatches
+        # pod size is a property of the *original* hierarchy: a remesh
+        # collapses the pod axis, but later pod_loss events still mean
+        # "a pod's worth of the original machine disappeared"
+        self._pod_size = 1
+        if self.mesh_ctx is not None and "pod" in self.mesh_ctx.axis_names:
+            self._pod_size = (
+                self.mesh_ctx.axis_size("data", 1) * self.mesh_ctx.model_size()
+            )
         self.state = "TRAINING"
         self.link_factor = 1.0
         self._global_batch: int | None = None
@@ -309,13 +454,13 @@ class Orchestrator:
 
     # ------------------------------------------------------------- handlers
 
-    def _apply_loss(self, ev: FaultEvent, params, opt_state, report, step):
+    def _apply_loss(self, ev: FaultEvent, params, opt_state, report, step,
+                    label: str | None = None):
         sizes = self.mesh_ctx.axis_sizes()
         total = 1
         for n in sizes.values():
             total *= n
-        pod_size = sizes.get("data", 1) * sizes.get("model", 1)
-        lost = ev.devices * (pod_size if ev.kind == "pod_loss" else 1)
+        lost = ev.devices * (self._pod_size if ev.kind == "pod_loss" else 1)
         survivors = total - lost
         mp = sizes.get("model", 1)
         plan = plan_remesh(
@@ -335,7 +480,7 @@ class Orchestrator:
         self._rebuild()
         reshard_s = time.monotonic() - t0
         rec = {
-            "step": step, "kind": ev.kind, "lost_devices": lost,
+            "step": step, "kind": label or ev.kind, "lost_devices": lost,
             "survivors": survivors, "mesh": self._mesh_shape(),
             "microbatches": plan.microbatches, "reshard_s": reshard_s,
             "note": plan.note,
@@ -343,8 +488,9 @@ class Orchestrator:
         report.remesh_events.append(rec)
         report.mesh_history.append((step, self._mesh_shape()))
         report.log.append(
-            f"step {step}: {ev.kind} ({lost} chips) -> REMESH onto {self._mesh_shape()} "
-            f"(in-memory reshard {reshard_s * 1e3:.1f} ms, no restore)"
+            f"step {step}: {label or ev.kind} ({lost} chips) -> REMESH onto "
+            f"{self._mesh_shape()} (in-memory reshard {reshard_s * 1e3:.1f} ms, "
+            f"no restore)"
         )
         return params, opt_state
 
@@ -405,7 +551,7 @@ class Orchestrator:
         report = OrchestratorReport()
         report.mesh_history.append((start_step, self._mesh_shape()))
         monitor = StragglerMonitor()
-        extra = self.schedule.straggler_extra()
+        stragglers = StragglerLedger()
         ckpt = (
             AsyncCheckpointer()
             if self.cfg.ckpt_dir and self.cfg.ckpt_every > 0
@@ -419,6 +565,8 @@ class Orchestrator:
                     params, opt_state = self._apply_event(
                         ev, params, opt_state, report, step
                     )
+                for ev in self.schedule.stragglers_at(step):
+                    stragglers.activate(ev)
                 batch = {
                     k: jnp.asarray(v) for k, v in pipe.global_batch_arrays(step).items()
                 }
@@ -426,10 +574,26 @@ class Orchestrator:
                 with jax_compat.use_mesh(self.mesh_ctx):
                     params, opt_state, metrics = self._step_fn(params, opt_state, batch)
                 jax.block_until_ready(metrics["loss"])
-                if extra.get(step):
-                    time.sleep(extra[step])  # injected straggler
+                slow = stragglers.tick()
+                if slow:
+                    time.sleep(slow)  # injected straggler
+                    report.injected_slow_s += slow
                 if monitor.step_end():
                     report.straggler_steps.append(step)
+                # drain/replace: after `patience` slowed steps, remesh away
+                # from the slow host via the device-loss path — the remaining
+                # injected slowdown disappears with it
+                if self.cfg.drain_stragglers:
+                    for entry in stragglers.drainable(self.cfg.straggler_patience):
+                        avoided = stragglers.cancel(entry)
+                        params, opt_state = self._apply_loss(
+                            entry[0], params, opt_state, report, step,
+                            label="straggler_drain",
+                        )
+                        rec = report.remesh_events[-1]
+                        rec["slow_s_avoided"] = avoided
+                        report.straggler_drains.append(rec)
+                        report.slow_s_avoided += avoided
                 report.useful_steps += 1
                 self._last_metrics = {k: float(v) for k, v in metrics.items()}
                 if ckpt and (step % self.cfg.ckpt_every == 0 or step == n_steps - 1):

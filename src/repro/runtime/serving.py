@@ -60,6 +60,11 @@ __all__ = [
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
 
+# compiled closures (engine prefill/decode, pool slot-writes) shared across
+# instances with the same configuration — a migration or restart that lands
+# on a previously-seen configuration pays no recompile
+_JIT_CACHE: dict = {}
+
 
 @dataclasses.dataclass
 class Request:
@@ -172,9 +177,15 @@ class KVPool:
         self.n_alloc = 0
         self.n_evict = 0
         self.high_water = 0
-        self._write = jax.jit(
-            partial(merge_slot_caches, stacked=self.stacked), donate_argnums=0
-        )
+        # the slot-write jit is shared across pools of the same layout, so a
+        # migrated/rebuilt pool pays no recompile to re-insert its rows
+        key = ("kvpool_write", model, n_slots, capacity, self.stacked)
+        self._write = _JIT_CACHE.get(key)
+        if self._write is None:
+            self._write = jax.jit(
+                partial(merge_slot_caches, stacked=self.stacked), donate_argnums=0
+            )
+            _JIT_CACHE[key] = self._write
 
     @property
     def n_free(self) -> int:
@@ -209,6 +220,44 @@ class KVPool:
     def write(self, slot: int, one_caches) -> None:
         """Install a prepared single-request decode cache into ``slot``."""
         self.caches = self._write(self.caches, one_caches, jnp.int32(slot))
+
+    # -------- migration primitives (runtime/serving_elastic.py) --------
+
+    def extract(self, slot: int):
+        """Copy ``slot``'s live cache row out as a host-side batch-1 cache
+        tree — the migration wire format: device-independent, so it can be
+        re-inserted into a pool living on any survivor mesh, bit-exact."""
+        if self.slot_rid[slot] is None:
+            raise ValueError(f"slot {slot} is not allocated")
+        ax = 1 if self.stacked else 0
+        return jax.tree.map(
+            lambda c: np.asarray(jax.lax.slice_in_dim(c, slot, slot + 1, axis=ax)),
+            self.caches,
+        )
+
+    def insert(self, slot: int, row) -> None:
+        """Install an extracted row into (allocated) ``slot`` — the inverse
+        of :meth:`extract`; ``extract -> insert`` round-trips bit-exact."""
+        if self.slot_rid[slot] is None:
+            raise ValueError(f"slot {slot} is not allocated — allocate before insert")
+        self.write(slot, row)
+
+    def check(self) -> None:
+        """Slot-accounting invariants (the chaos harness calls this after
+        every migration): the free list and the allocated slots partition the
+        pool, and no request id owns two slots."""
+        free = set(self._free)
+        used = {s for s, r in enumerate(self.slot_rid) if r is not None}
+        if len(free) != len(self._free):
+            raise AssertionError(f"free list has duplicates: {self._free}")
+        if free & used or free | used != set(range(self.n_slots)):
+            raise AssertionError(
+                f"slot accounting corrupt: free={sorted(free)} used={sorted(used)} "
+                f"of {self.n_slots} slots"
+            )
+        rids = [r for r in self.slot_rid if r is not None]
+        if len(rids) != len(set(rids)):
+            raise AssertionError(f"request id owns two slots: {self.slot_rid}")
 
 
 # --------------------------------------------------------------------------
@@ -397,6 +446,7 @@ class ContinuousBatchingEngine:
         seed: int = 0,
         pad_id: int = 0,
         min_prompt_bucket: int = 8,
+        audit: bool = False,
     ):
         if model.cfg.enc_dec:
             raise NotImplementedError("continuous batching supports decoder-only models")
@@ -433,7 +483,19 @@ class ContinuousBatchingEngine:
         self._bucket_prompts = all(cfg.layer_is_attention(i) for i in range(cfg.n_layers))
         self.min_prompt_bucket = min_prompt_bucket
 
-        # per-slot host state
+        # migration hooks (runtime/serving_elastic.py): paused admission and
+        # the (rid, token index) audit trail the chaos harness checks for
+        # monotone, gap-free, never-repeated token production.  The trail
+        # grows one tuple per produced token, so it is opt-in (audit=True) —
+        # tests enable it; a long-lived server keeps it off
+        self._paused = False
+        self.audit_enabled = audit
+        self.audit: list[tuple[int, int]] = []
+
+        self._reset_slot_state(n_slots)
+        self._build_jits()
+
+    def _reset_slot_state(self, n_slots: int) -> None:
         S = n_slots
         self._slot_req: list[Optional[Request]] = [None] * S
         self._tokens = np.zeros((S,), np.int32)
@@ -441,8 +503,30 @@ class ContinuousBatchingEngine:
         self._temps = np.zeros((S,), np.float32)
         self._rids = np.zeros((S,), np.int32)
 
-        mesh_ = mesh
-        m = model
+    def _jit_cache_key(self):
+        """Configurations with the same key share compiled executables: a
+        migration or restart that lands back on a previously-seen
+        (model, mesh, pool) configuration pays no recompile."""
+        return (
+            self.model, self.mesh, self.pool.n_slots, self.pool.capacity,
+            self.pool.stacked, self.seed,
+        )
+
+    def _build_jits(self) -> None:
+        """(Re)build the jitted prefill/decode closures against the current
+        ``self.mesh`` / pool layout.  Called at construction and again by
+        :meth:`migrate` after a remesh.  Closures are cached per
+        configuration (:meth:`_jit_cache_key`) so only a *new* configuration
+        compiles — that first-visit compile is part of the honest migration
+        cost; revisits (fail-back, A/B restarts) are free."""
+        cached = _JIT_CACHE.get(self._jit_cache_key())
+        if cached is not None:
+            self._prefill_into, self._decode = cached
+            return
+        mesh_ = self.mesh
+        m = self.model
+        seed = self.seed
+        max_len = self.pool.capacity
 
         # sampling is deterministic per (seed, request id, token index): the
         # drawn token never depends on slot assignment or admission order
@@ -488,6 +572,65 @@ class ContinuousBatchingEngine:
 
         self._prefill_into = prefill_into
         self._decode = decode
+        _JIT_CACHE[self._jit_cache_key()] = (prefill_into, decode)
+
+    # ---------------- elasticity hooks ----------------
+
+    def pause_admission(self) -> None:
+        """Stop admitting queued requests (decode of active slots continues).
+        The migration contract: admission is paused for the duration of a
+        KV-pool migration so no prefill races the extract/insert window."""
+        self._paused = True
+
+    def resume_admission(self) -> None:
+        self._paused = False
+
+    def active_requests(self) -> list[Request]:
+        return [r for r in self._slot_req if r is not None]
+
+    def migrate(self, params=None, mesh=None, n_slots: Optional[int] = None) -> int:
+        """Rebuild the pool and the jitted paths on a new mesh/param
+        placement, preserving in-flight decode state bit-exact.
+
+        Every active slot's ring cache is extracted to host, the pool is
+        reconstructed at the new size, and each row is re-inserted; the
+        per-slot host state is rebuilt from the ``Request`` objects, so
+        decode resumes from the last completed step — no token is redone,
+        lost, or reordered (the audit trail stays gap-free).  ``mesh=None``
+        keeps the current mesh; callers pause admission around this (the
+        serving orchestrator does).  Returns the number of migrated slots.
+        """
+        active = [(s, r) for s, r in enumerate(self._slot_req) if r is not None]
+        new_slots = self.pool.n_slots if n_slots is None else int(n_slots)
+        if new_slots < len(active):
+            raise ValueError(
+                f"cannot migrate {len(active)} in-flight requests into "
+                f"{new_slots} slots — the survivor pool must hold every live row"
+            )
+        rows = [(r, self.pool.extract(s)) for s, r in active]
+        old = self.pool
+        for s, _ in active:  # lifetime ledger: every allocate gets its free
+            old.free(s)
+        if params is not None:
+            self.params = params
+        if mesh is not None:
+            self.mesh = mesh
+        self.pool = KVPool(self.model, new_slots, old.capacity)
+        self.pool.n_alloc += old.n_alloc
+        self.pool.n_evict += old.n_evict
+        self.pool.high_water = old.high_water
+        self._reset_slot_state(new_slots)
+        for req, row in rows:
+            slot = self.pool.allocate(req.rid)
+            self.pool.insert(slot, row)
+            req.slot = slot
+            self._slot_req[slot] = req
+            self._tokens[slot] = req.tokens_out[-1]
+            self._pos[slot] = req.prompt_len + len(req.tokens_out) - 1
+            self._temps[slot] = req.temperature
+            self._rids[slot] = req.rid
+        self._build_jits()
+        return len(rows)
 
     # ---------------- submission ----------------
 
@@ -576,6 +719,8 @@ class ContinuousBatchingEngine:
             req.t_admit = now
             req.t_first = now
             req.tokens_out.append(tok)
+            if self.audit_enabled:
+                self.audit.append((req.rid, 0))
             self._slot_req[slot] = req
             self._tokens[slot] = tok
             self._pos[slot] = req.prompt_len
@@ -600,7 +745,7 @@ class ContinuousBatchingEngine:
         produced = 0
 
         # ---- admission: fill freed slots from the queue
-        candidates = self.queue.arrived(now)
+        candidates = [] if self._paused else self.queue.arrived(now)
         if candidates and self.pool.n_free:
             n_heavy_active = sum(
                 1 for r in self._slot_req if r is not None and r.moe_heavy
@@ -635,6 +780,8 @@ class ContinuousBatchingEngine:
                 if req is None:
                     continue
                 tok = int(toks[slot])
+                if self.audit_enabled:
+                    self.audit.append((req.rid, len(req.tokens_out)))
                 req.tokens_out.append(tok)
                 self._tokens[slot] = tok
                 self._pos[slot] += 1
@@ -666,6 +813,8 @@ class ContinuousBatchingEngine:
                 break
             made = self.step(clock())
             if made == 0 and not any(r is not None for r in self._slot_req):
+                if self._paused:
+                    break  # admission paused, nothing active: cannot progress
                 nxt = self.queue.next_arrival()
                 if nxt is not None and clock() < nxt:
                     if wall:

@@ -1,0 +1,310 @@
+"""Elastic serving under runtime faults (docs/SERVING.md, elasticity section).
+
+PR 4 gave *training* the CLEX canonical-partition property at the runtime
+layer: lose hardware, keep going on the surviving sub-hierarchy.  This module
+is the serving twin — a :class:`ServingOrchestrator` drives the
+:class:`~repro.runtime.serving.ContinuousBatchingEngine` through the same
+:class:`~repro.runtime.orchestrator.FaultSchedule` events the training
+orchestrator understands:
+
+* **device/pod loss** → remesh onto the survivors
+  (``plan``-free: the model axis is kept, ``make_elastic_mesh`` shrinks the
+  data axis), ``device_put`` the params onto the new mesh
+  (:func:`~repro.runtime.sharding.reshard_params`) and **migrate the live
+  KV pool**: admission is paused, every active slot's ring cache is
+  extracted to host, re-inserted into the rebuilt pool, and in-flight
+  decode resumes from the last completed step — bit-exact, no token redone
+  or lost (the engine's audit trail stays gap-free).
+* **straggler** → after ``straggler_patience`` slowed steps, *drain* the
+  slow host: migrate its slots away through the same path and remesh
+  without it, cutting the remaining injected slowdown short (the p99
+  protection the low-latency-topology line of work argues for).
+* **link degradation** → re-price admission: the scheduler's
+  :class:`~repro.core.collectives.CollectiveCostModel` is swapped for its
+  ``degraded(bandwidth_factor)`` counterpart, so the a2a budget admits
+  fewer MoE-heavy requests per step while the top level is slow;
+  ``link_restored`` swaps the nominal model back.
+
+States: ``SERVING`` --loss/straggler-drain--> ``MIGRATE`` (pause, extract,
+remesh/reshard, insert, resume — transient, synchronous) --> ``SERVING``;
+``SERVING`` --link_degraded--> ``DEGRADED_SCHED`` --link_restored-->
+``SERVING``.
+
+The chaos harness in ``tests/test_serving_elastic.py`` pins the contract:
+for randomized fault schedules, completed-request token streams are
+identical to a fault-free run of the same seeded workload on the shrunken
+mesh, with zero KV-slot leaks and no double-completions.
+``benchmarks/serving_bench.py --fault`` measures goodput and p99 against a
+restart-the-engine baseline under the same schedules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..launch import jax_compat
+from ..launch.mesh import make_elastic_mesh
+from . import sharding as shd
+from .orchestrator import FaultSchedule, StragglerLedger
+from .serving import ContinuousBatchingEngine
+
+__all__ = [
+    "ServingOrchestratorConfig",
+    "ServingReport",
+    "ServingOrchestrator",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingOrchestratorConfig:
+    """Knobs (docs/SERVING.md):
+
+    * ``shrink_pool`` — scale the KV pool with the survivor fraction on
+      migration (HBM shrinks with the machine); never below the number of
+      in-flight requests, which must all keep their rows.
+    * ``straggler_patience`` — slowed steps tolerated before the slow host
+      is drained (its slots migrated away, its chips remeshed out).
+    """
+
+    shrink_pool: bool = True
+    straggler_patience: int = 2
+
+
+@dataclasses.dataclass
+class ServingReport:
+    """What happened during an orchestrated serving run — the goodput ledger."""
+
+    steps: int = 0
+    tokens: int = 0
+    wall_s: float = 0.0
+    migrations: list = dataclasses.field(default_factory=list)
+    drains: list = dataclasses.field(default_factory=list)
+    repricings: list = dataclasses.field(default_factory=list)
+    injected_slow_s: float = 0.0
+    slow_s_avoided: float = 0.0
+    mesh_history: list = dataclasses.field(default_factory=list)
+    log: list = dataclasses.field(default_factory=list)
+    final_state: str = "SERVING"
+
+    def goodput(self) -> float:
+        return self.tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ServingOrchestrator:
+    """Drives a :class:`ContinuousBatchingEngine` through a
+    :class:`FaultSchedule`.
+
+    Events are keyed by *engine step* (one scheduling round), the serving
+    mirror of the training orchestrator's step-boundary semantics.  The
+    migration contract (pinned by ``tests/test_serving_elastic.py``):
+
+    1. admission pauses — no prefill races the extract/insert window;
+    2. every active slot's cache row is extracted to host (bit-exact wire
+       format, device-independent);
+    3. params are ``device_put`` onto the survivor mesh, the pool and the
+       jitted paths are rebuilt there, rows are re-inserted;
+    4. admission resumes; in-flight decode continues from the last
+       completed step.  No token is redone, lost, or reordered.
+    """
+
+    def __init__(
+        self,
+        engine: ContinuousBatchingEngine,
+        schedule: FaultSchedule = FaultSchedule(),
+        cfg: ServingOrchestratorConfig = ServingOrchestratorConfig(),
+    ):
+        self.engine = engine
+        self.schedule = schedule
+        self.cfg = cfg
+        self.state = "SERVING"
+        self.link_factor = 1.0
+        self._base_cost_model = engine.scheduler.cost_model
+        self.mesh_ctx = jax_compat.MeshContext.from_any(engine.mesh)
+        needs_mesh = any(
+            e.kind in ("device_loss", "pod_loss", "straggler")
+            for e in schedule.events
+        )
+        if self.mesh_ctx is None and needs_mesh:
+            raise ValueError(
+                "device/pod-loss and straggler-drain events need the engine "
+                "built with an explicit mesh= to remesh from — construct the "
+                "ContinuousBatchingEngine with a mesh (the launcher builds an "
+                "elastic one over all devices when --mesh is omitted)"
+            )
+        # pod size belongs to the *original* hierarchy: migration collapses
+        # the pod axis, but later pod_loss events still mean a pod's worth
+        # of the original machine
+        self._pod_size = 1
+        if self.mesh_ctx is not None and "pod" in self.mesh_ctx.axis_names:
+            self._pod_size = (
+                self.mesh_ctx.axis_size("data", 1) * self.mesh_ctx.model_size()
+            )
+        if self.mesh_ctx is not None:
+            schedule.validate(
+                int(self.mesh_ctx.mesh.devices.size),
+                model_parallel=self.mesh_ctx.model_size(),
+                n_pods=self.mesh_ctx.axis_size("pod", 1),
+            )
+        self.report = ServingReport()
+
+    # ------------------------------------------------------------- helpers
+
+    def _mesh_shape(self) -> str:
+        sizes = self.mesh_ctx.axis_sizes() if self.mesh_ctx else {}
+        return "x".join(f"{a}={n}" for a, n in sizes.items()) or "meshless"
+
+    # ------------------------------------------------------------- handlers
+
+    def _migrate(self, step: int, lost: int, reason: str, report) -> dict:
+        """The live KV-pool migration: pause → extract → remesh/reshard →
+        insert → resume.  Returns the record appended to the report."""
+        ctx = self.mesh_ctx
+        total = int(ctx.mesh.devices.size)
+        survivors = total - lost
+        mp = ctx.model_size()
+        # the model axis is kept whole (parameter shards must still fit):
+        # survivors that don't divide it are left idle, like plan_remesh
+        usable = (survivors // mp) * mp
+        new_mesh = make_elastic_mesh(usable, mp)
+        eng = self.engine
+        n_active = len(eng.active_requests())
+        n_slots = eng.pool.n_slots
+        if self.cfg.shrink_pool:
+            scaled = int(np.ceil(eng.pool.n_slots * usable / total))
+            n_slots = max(1, n_active, scaled)
+        t0 = time.monotonic()
+        eng.pause_admission()
+        self.state = "MIGRATE"
+        new_params = shd.reshard_params(eng.model.param_axes(), eng.params, new_mesh)
+        migrated = eng.migrate(params=new_params, mesh=new_mesh, n_slots=n_slots)
+        eng.pool.check()
+        eng.resume_admission()
+        self.state = "SERVING"
+        self.mesh_ctx = jax_compat.MeshContext.from_any(new_mesh)
+        dt = time.monotonic() - t0
+        rec = {
+            "step": step, "reason": reason, "lost_devices": lost,
+            "survivors": survivors, "devices_used": usable,
+            "mesh": self._mesh_shape(), "n_slots": n_slots,
+            "migrated_slots": migrated, "migrate_s": dt,
+        }
+        report.migrations.append(rec)
+        report.mesh_history.append((step, self._mesh_shape()))
+        report.log.append(
+            f"step {step}: {reason} ({lost} chips) -> MIGRATE {migrated} live "
+            f"KV slots onto {self._mesh_shape()} ({dt * 1e3:.0f} ms, admission "
+            f"paused, decode resumes in place)"
+        )
+        return rec
+
+    def _reprice(self, ev, step: int, report) -> None:
+        """Swap the scheduler's cost model for the degraded/nominal machine
+        so admission pricing tracks the actual top-level bandwidth."""
+        self.link_factor = (
+            ev.bandwidth_factor if ev.kind == "link_degraded" else 1.0
+        )
+        sch = self.engine.scheduler
+        before = sch._step_cost(1)
+        sch.cost_model = (
+            self._base_cost_model
+            if self.link_factor >= 1.0
+            else self._base_cost_model.degraded(self.link_factor)
+        )
+        after = sch._step_cost(1)
+        self.state = "DEGRADED_SCHED" if self.link_factor < 1.0 else "SERVING"
+        rec = {
+            "step": step, "event": ev.kind, "link_factor": self.link_factor,
+            "a2a_cost_per_heavy_before_s": before,
+            "a2a_cost_per_heavy_after_s": after,
+        }
+        report.repricings.append(rec)
+        report.log.append(
+            f"step {step}: {ev.kind} (bw x{self.link_factor:g}) -> admission "
+            f"repriced ({before:.2e}s -> {after:.2e}s per heavy request; "
+            f"{self.state})"
+        )
+
+    # ------------------------------------------------------------- run
+
+    def run(
+        self,
+        clock: Optional[Callable[[], float]] = None,
+        max_steps: int = 1_000_000,
+    ) -> dict:
+        """Serve until queue and slots drain, applying fault events at their
+        step boundaries.  Same clock semantics as ``engine.run``: wall clock
+        by default (idle waits sleep, injected slowdowns really sleep), or a
+        virtual clock (discrete-event: idle fast-forwards, slowdowns are
+        accounted, not slept).  Returns ``{rid: tokens}`` for completed
+        requests; the ledger is in ``self.report``."""
+        eng = self.engine
+        report = self.report = ServingReport()
+        if self.mesh_ctx is not None:
+            report.mesh_history.append((0, self._mesh_shape()))
+        wall = clock is None
+        clock = clock or time.monotonic
+        stragglers = StragglerLedger()
+        fired: set[int] = set()  # boundary steps whose events already applied
+        t0 = time.monotonic()
+        step = 0
+        for _ in range(max_steps):
+            if not len(eng.queue) and not eng.active_requests():
+                break
+            if step not in fired:
+                # events fire exactly once, at the boundary before the
+                # step's work — even if idle rounds revisit this boundary
+                fired.add(step)
+                for ev in self.schedule.at(step):
+                    if ev.kind in ("device_loss", "pod_loss"):
+                        lost = ev.devices * (
+                            self._pod_size if ev.kind == "pod_loss" else 1
+                        )
+                        self._migrate(step, lost, ev.kind, report)
+                    else:
+                        self._reprice(ev, step, report)
+                for ev in self.schedule.stragglers_at(step):
+                    stragglers.activate(ev)
+            made = eng.step(clock())
+            report.tokens += made
+            if made == 0:
+                # idle round (open-loop lull): wait for the next arrival —
+                # fault steps count *scheduling rounds that did work*, so
+                # idle time never burns an event's step off the schedule
+                nxt = eng.queue.next_arrival()
+                if nxt is not None and clock() < nxt:
+                    if wall:
+                        while clock() < nxt:
+                            time.sleep(min(1e-3, max(nxt - clock(), 0.0)))
+                    else:
+                        made = eng.step(nxt)  # jump virtual time
+                        report.tokens += made
+                if made == 0:
+                    continue  # still idle: step (and its events) unchanged
+            slow = stragglers.tick()
+            if slow:
+                report.injected_slow_s += slow
+                if wall:
+                    time.sleep(slow)
+            for entry in stragglers.drainable(self.cfg.straggler_patience):
+                avoided = stragglers.cancel(entry)
+                rec = self._migrate(step, entry[0].devices, "straggler_drain",
+                                    report)
+                rec["slow_s_avoided"] = avoided
+                report.drains.append(rec)
+                report.slow_s_avoided += avoided
+            step += 1
+            report.steps = step
+        report.wall_s = time.monotonic() - t0
+        report.final_state = self.state
+        return {
+            rid: np.asarray(r.tokens_out, np.int32)
+            for rid, r in eng.requests.items()
+            if r.done
+        }

@@ -21,6 +21,7 @@ __all__ = [
     "batch_shardings",
     "cache_shardings",
     "opt_state_shardings",
+    "reshard_params",
 ]
 
 LOGICAL_RULES: dict[str, str | None] = {
@@ -167,3 +168,13 @@ def opt_state_shardings(param_shardings_tree, mesh):
         "m": param_shardings_tree,
         "v": param_shardings_tree,
     }
+
+
+def reshard_params(axes_tree, params, mesh):
+    """``device_put`` every param leaf onto the ``NamedSharding`` the logical
+    rules imply on ``mesh`` — pure data movement, bit-exact.  The shared core
+    of the trainer's :func:`~repro.runtime.orchestrator.reshard_to_mesh` and
+    the serving orchestrator's KV-pool migration (both remesh onto a survivor
+    sub-hierarchy without any checkpoint round-trip)."""
+    psh = param_shardings(axes_tree, mesh, params)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), params, psh)

@@ -53,6 +53,41 @@ def test_serving_bench_tiny_emits_wellformed_json(tmp_path):
             == on_disk["closed_ragged"]["one_shot"]["tokens"])
 
 
+def test_serving_bench_tiny_fault_smoke(tmp_path):
+    """serving_bench --tiny --fault-only drives the elastic orchestrated
+    engine and the restart baseline through both fault scenarios and writes
+    the faulted rows (docs/SERVING.md).  Structure-only at tiny scale: the
+    orchestrated-beats-restart margins are a default-scale claim (the
+    committed BENCH_serving.json), since compile noise dominates tiny runs."""
+    from benchmarks.serving_bench import main
+
+    results = main(["--tiny", "--fault-only", "--requests", "6",
+                    "--slots", "2", "--out", str(tmp_path)])
+    on_disk = json.loads((tmp_path / "BENCH_serving.json").read_text())
+    assert set(on_disk) == set(results)
+    assert "closed_ragged" not in on_disk  # --fault-only skips the base rows
+    rows = on_disk["faulted_open_poisson"]["scenarios"]
+    assert set(rows) == {"device_loss", "straggler"}
+    for name, row in rows.items():
+        assert row["goodput_ratio"] > 0 and row["p99_ratio"] > 0
+        for eng in ("orchestrated", "restart"):
+            stats = row[eng]
+            assert stats["tokens"] > 0
+            assert stats["goodput_tokens_per_s"] > 0
+            assert stats["latency_p99_s"] >= stats["latency_p50_s"]
+        # both engines completed the same useful tokens (work conservation)
+        assert row["orchestrated"]["tokens"] == row["restart"]["tokens"]
+        # the elastic path never redoes a token; device loss makes the
+        # restart baseline redo every in-flight one
+        assert row["orchestrated"]["redone_tokens"] == 0
+        if name == "device_loss":
+            assert row["orchestrated"]["migrations"] == 1
+            assert row["restart"]["redone_tokens"] > 0
+        else:
+            assert row["orchestrated"]["straggler_drains"] == 1
+            assert row["orchestrated"]["slow_s_avoided"] > 0
+
+
 def test_training_bench_tiny_emits_wellformed_json(tmp_path):
     """training_bench --tiny drives the orchestrated and restart engines
     through fault scenarios and writes BENCH_training.json with the goodput
