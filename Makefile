@@ -6,7 +6,7 @@ PYTEST ?= python -m pytest
 # a missing plugin).  72 is a floor — raise it as coverage grows.
 COVFLAGS := $(shell python -c "import pytest_cov" 2>/dev/null && echo "--cov=repro --cov-fail-under=72")
 
-.PHONY: verify verify-slow test deps linkcheck bench-training bench-serving
+.PHONY: verify verify-slow test deps linkcheck bench-training bench-serving bench-sim
 
 # Docs gate: no references to non-existent docs/*.md or repo-root *.md files
 # from Python docstrings or markdown (tools/check_doc_links.py).
@@ -41,6 +41,15 @@ bench-training:
 BENCH_SERVING_FLAGS ?= --fault
 bench-serving:
 	PYTHONPATH=src python -m benchmarks.serving_bench $(BENCH_SERVING_FLAGS)
+
+# Paper-scale simulator bench (docs/SIMULATOR.md): n = 10^6 CLEX vs torus
+# on the streaming engine.  Writes benchmarks/results/BENCH_sim.json and
+# syncs the repo-root copy.  CI runs the shrunk smoke:
+#   make bench-sim BENCH_SIM_FLAGS="--paper-m 8 --paper-L 3 --paper-msgs 4 \
+#     --paper-torus-k 16 --paper-chunk 65536"
+BENCH_SIM_FLAGS ?=
+bench-sim:
+	PYTHONPATH=src python -m benchmarks.run --scale paper $(BENCH_SIM_FLAGS)
 
 deps:
 	pip install -r requirements-dev.txt

@@ -81,11 +81,31 @@ def build_roofline() -> str:
 
 
 def build_simulator(results_path: str = "benchmarks/results/bench_results.json") -> str:
-    if not os.path.exists(results_path):
-        return "\n(no bench_results.json — run `python -m benchmarks.run` first)\n"
-    with open(results_path) as f:
-        results = json.load(f)
+    results = {}
+    if os.path.exists(results_path):
+        with open(results_path) as f:
+            results = json.load(f)
     lines = []
+    # paper-scale streaming-engine run, if its artifact sits next to the
+    # results file (written by `python -m benchmarks.run --scale paper`)
+    sim_path = os.path.join(os.path.dirname(results_path) or ".", "BENCH_sim.json")
+    if os.path.exists(sim_path):
+        with open(sim_path) as f:
+            sim = json.load(f)
+        c, t, fx = sim["clex"], sim["torus"], sim["factors"]
+        lines += [
+            f"\n### Paper scale (streaming engine, n = {c['n']:,})\n",
+            f"CLEX C(1/{c['L']},{c['L']}) m={c['m']} mode={c['mode']} "
+            f"msgs/node={c['msgs_per_node']} ({c['wall_s']}s) vs torus "
+            f"{t['k']}^3 n={t['n']:,} msgs/node={t['msgs_per_node']} "
+            f"({t['wall_s']}s); peak RSS {sim['peak_rss_mb']} MB.\n",
+            _markdown_table(c["rows"]),
+            "",
+            _markdown_table([
+                {"factor": k.replace("_", " "), "value": v} for k, v in fx.items()
+            ]),
+            "",
+        ]
     mat = results.get("scenario_matrix")
     if mat:
         rows = mat["rows"] if isinstance(mat, dict) else mat
@@ -103,7 +123,9 @@ def build_simulator(results_path: str = "benchmarks/results/bench_results.json")
                 if isinstance(a2a, dict) and "clean" in a2a else [a2a])
         lines += ["\n### All-to-all flooding vs analytic bound (Sec. II-C)\n",
                   _markdown_table(rows), ""]
-    return "\n".join(lines) if lines else "\n(no simulator sections in results)\n"
+    if not lines:
+        return "\n(no bench_results.json — run `python -m benchmarks.run` first)\n"
+    return "\n".join(lines)
 
 
 def sync_bench_artifacts(results_dir: str = "benchmarks/results",
@@ -117,6 +139,8 @@ def sync_bench_artifacts(results_dir: str = "benchmarks/results",
     written = []
     for src in sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json"))):
         dst = os.path.join(dest_dir, os.path.basename(src))
+        if os.path.abspath(src) == os.path.abspath(dst):
+            continue  # results dir IS the dest (e.g. a tmp outdir) — nothing to sync
         shutil.copyfile(src, dst)
         written.append(dst)
     return written

@@ -67,6 +67,80 @@ def run_all_tables(full: bool = False):
     return [run_table(s[0], full=full) for s in _SETTINGS]
 
 
+def run_paper_scale(
+    m: int = 32,
+    L: int = 4,
+    msgs_per_node: "int | None" = None,
+    mode: str = "dense",
+    torus_k: "int | None" = None,
+    torus_msgs: int = 4,
+    chunk_size: int = 1 << 21,
+    seed: int = 1,
+):
+    """The paper's headline n = 10^6 experiment on the streaming engine:
+    CLEX C(1/4, 4) point-to-point under Table-I traffic vs the equal-size
+    3D-torus DOR baseline, with the utilization / path-length factors the
+    abstract claims (>= 10x bandwidth utilization, >= 5x shorter routing).
+
+    Defaults reproduce the full scale (~1-2 min on a laptop CPU, < 2 GB);
+    the CI smoke shrinks every knob (see ``make bench-sim``)."""
+    import resource
+
+    from repro.core import TorusTopology, derive_comparison as _derive
+    from repro.core.sim_engine import StreamingEngine
+
+    topo = CLEXTopology(m, L)
+    key = "c14_4" if (m, L) == (32, 4) else "c13_3" if (m, L) == (64, 3) else None
+    if msgs_per_node is None:
+        if key is not None:
+            msgs_per_node = PAPER_TRAFFIC[(key, mode)]
+        else:
+            msgs_per_node = max(2, int(round(0.9 * m)) if mode == "dense" else 4)
+    eng = StreamingEngine(chunk_size=chunk_size)
+    t0 = time.time()
+    clex = eng.run_clex(topo, msgs_per_node, mode=mode, seed=seed)
+    clex_wall = time.time() - t0
+    derived = _derive(clex)
+    k = torus_k if torus_k is not None else max(2, int(round(topo.n ** (1 / 3))))
+    tor_topo = TorusTopology.cube(k)
+    t1 = time.time()
+    tor = eng.run_torus(tor_topo, torus_msgs, seed=seed)
+    torus_wall = time.time() - t1
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    return {
+        "engine": "streaming",
+        "chunk_size": chunk_size,
+        "seed": seed,
+        "clex": {
+            "m": m, "L": L, "n": topo.n,
+            "msgs_per_node": msgs_per_node, "mode": mode,
+            "rows": clex.table(),
+            "sum_avg_rounds": round(clex.sum_avg_rounds, 2),
+            "sum_avg_hops": round(clex.sum_avg_hops, 2),
+            "edge_load": clex.edge_load,
+            "paper_table": PAPER_TABLES["table1" if mode == "dense" else "table3"]
+            if key == "c14_4" else None,
+            "wall_s": round(clex_wall, 2),
+        },
+        "torus": {
+            "k": k, "n": tor_topo.n, "msgs_per_node": torus_msgs,
+            **tor.row(),
+            "wall_s": round(torus_wall, 2),
+        },
+        "factors": {
+            # abstract: ">= one order of magnitude higher bandwidth utilization"
+            "bandwidth_utilization_factor": derived.row()["bandwidth_gain"],
+            # abstract: "reduces the length of routing paths by a factor >= 5"
+            "hop_delay_reduction": derived.row()["hop_delay_reduction"],
+            "propagation_ratio": derived.row()["propagation_ratio"],
+            "path_length_factor_vs_torus_hops": round(
+                tor.avg_hops / max(clex.sum_avg_hops, 1e-9), 2),
+        },
+        "peak_rss_mb": round(rss_mb, 1),
+        "wall_s_total": round(time.time() - t0, 2),
+    }
+
+
 # ---- scenario engine / fault injection (beyond the paper's tables) --------
 # CI-scale topologies: CLEX and torus at the same node count for a fair
 # matrix; --full uses the paper's C(1/3,3) against the equivalent torus.

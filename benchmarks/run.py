@@ -30,6 +30,18 @@ def main(argv: list | None = None) -> dict:
                     help="smoke-test scale: skip the table sims, tiny scenario runs")
     ap.add_argument("--out", default="benchmarks/results",
                     help="directory for the JSON artifact")
+    ap.add_argument("--scale", choices=["default", "paper"], default="default",
+                    help="'paper': the n=1e6 CLEX-vs-torus streaming-engine run "
+                         "only; writes BENCH_sim.json")
+    ap.add_argument("--paper-m", type=int, default=32)
+    ap.add_argument("--paper-L", type=int, default=4)
+    ap.add_argument("--paper-msgs", type=int, default=None,
+                    help="messages per node (default: the paper's Table setting)")
+    ap.add_argument("--paper-mode", choices=["dense", "light"], default="dense")
+    ap.add_argument("--paper-chunk", type=int, default=1 << 21)
+    ap.add_argument("--paper-torus-k", type=int, default=None,
+                    help="torus side length (default: round(n^(1/3)))")
+    ap.add_argument("--paper-torus-msgs", type=int, default=4)
     args = ap.parse_args(argv)
 
     from benchmarks import collective_model, paper_tables
@@ -37,6 +49,37 @@ def main(argv: list | None = None) -> dict:
 
     results = {}
     os.makedirs(args.out, exist_ok=True)
+
+    if args.scale == "paper":
+        res = paper_tables.run_paper_scale(
+            m=args.paper_m, L=args.paper_L, msgs_per_node=args.paper_msgs,
+            mode=args.paper_mode, torus_k=args.paper_torus_k,
+            torus_msgs=args.paper_torus_msgs, chunk_size=args.paper_chunk,
+        )
+        out_path = os.path.join(args.out, "BENCH_sim.json")
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1, default=str)
+        f_ = res["factors"]
+        _emit(
+            f"paper_scale_clex_{res['clex']['n']}nodes",
+            res["clex"]["wall_s"] * 1e6,
+            f"bw_util={f_['bandwidth_utilization_factor']};"
+            f"hop_delay_red={f_['hop_delay_reduction']};"
+            f"path_vs_torus={f_['path_length_factor_vs_torus_hops']}",
+        )
+        _emit(
+            f"paper_scale_torus_{res['torus']['n']}nodes",
+            res["torus"]["wall_s"] * 1e6,
+            f"avg_hops={res['torus']['avg_hops']};"
+            f"max_link_load={res['torus']['max_link_load']}",
+        )
+        print(f"  peak_rss_mb={res['peak_rss_mb']} total={res['wall_s_total']}s",
+              file=sys.stderr)
+        if os.path.abspath(args.out) == os.path.abspath("benchmarks/results"):
+            from benchmarks.make_report import sync_bench_artifacts
+
+            sync_bench_artifacts()
+        return res
 
     if args.tiny:
         results.update(_run_tiny())

@@ -20,18 +20,27 @@ from .scenarios import (
     AllToAllResult,
     TrafficScenario,
     fault_degradation_curve,
+    iter_traffic,
     make_traffic,
     run_clex_scenario,
     run_torus_scenario,
     scenario_matrix,
     simulate_all_to_all,
 )
+from .sim_engine import GoldenEngine, SimEngine, StreamingEngine, get_engine
 from .simulator import (
     ClexMachine,
     LevelStats,
     SimulationResult,
     simulate_point_to_point,
     uniform_permutation_traffic,
+)
+from .streaming import simulate_point_to_point_streaming
+from .torus_sim import (
+    TorusSimResult,
+    TorusStreamResult,
+    simulate_torus_dor,
+    simulate_torus_dor_streaming,
 )
 from .topology import CLEXTopology, FaultSet, TorusTopology, copy_index, digit, with_digit
 
@@ -41,9 +50,14 @@ __all__ = [
     "ClexMachine",
     "DerivedComparison",
     "FaultSet",
+    "GoldenEngine",
     "LevelStats",
     "SCENARIOS",
+    "SimEngine",
     "SimulationResult",
+    "StreamingEngine",
+    "TorusSimResult",
+    "TorusStreamResult",
     "TorusTopology",
     "TrafficScenario",
     "UnroutableError",
@@ -56,6 +70,8 @@ __all__ = [
     "digit",
     "fault_degradation_curve",
     "flood_route",
+    "get_engine",
+    "iter_traffic",
     "log_star",
     "make_traffic",
     "run_clex_scenario",
@@ -65,6 +81,9 @@ __all__ = [
     "scenario_matrix",
     "simulate_all_to_all",
     "simulate_point_to_point",
+    "simulate_point_to_point_streaming",
+    "simulate_torus_dor",
+    "simulate_torus_dor_streaming",
     "uniform_permutation_traffic",
     "unrolled_schedule",
     "valiant_intermediate",

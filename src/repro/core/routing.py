@@ -27,6 +27,8 @@ __all__ = [
     "sample_gateways",
     "sample_gateways_faulty",
     "bundle_hop",
+    "bundle_edge_targets",
+    "bundle_rounds_from_counts",
     "all_to_all_tree_hops",
     "flood_route",
     "valiant_intermediate",
@@ -166,11 +168,7 @@ def bundle_hop(
         q = counts[gw_inv]
         edge = perms[gw_inv, ranks % q]
         rounds = ranks // q + 1
-    low_span = m ** (level - 2)
-    lows = cur % low_span
-    upper = copy_index(cur, level, m)
-    new = upper * m**level + b * m ** (level - 1) + edge * low_span + lows
-    new = new.astype(np.int64)
+    new = bundle_edge_targets(topo, cur, b, edge, level)
     rounds = rounds.astype(np.int64)
     if audit is not None:
         audit.append(
@@ -178,6 +176,50 @@ def bundle_hop(
              "round": rounds.copy(), "target": new.copy()}
         )
     return new, rounds
+
+
+def bundle_edge_targets(
+    topo: CLEXTopology,
+    cur: np.ndarray,
+    dest_copy: np.ndarray | int,
+    edge: np.ndarray | int,
+    level: int,
+) -> np.ndarray:
+    """Node reached by crossing ``cur``'s level-``level`` bundle on parallel
+    edge ``edge`` toward sibling copy ``dest_copy`` (digit l-1 of the true
+    destination).  Pure digit arithmetic — accepts chunked inputs of any
+    size and never sorts or groups, so the streaming engine can use it on
+    fixed-size message chunks."""
+    m = topo.m
+    low_span = m ** (level - 2)
+    upper = copy_index(cur, level, m)
+    new = upper * m**level + dest_copy * m ** (level - 1) + edge * low_span + cur % low_span
+    return new.astype(np.int64)
+
+
+def bundle_rounds_from_counts(
+    counts: np.ndarray, live_edges: np.ndarray | int
+) -> tuple[int, int]:
+    """Exact aggregate of :func:`bundle_hop`'s round accounting from a
+    per-gateway message-count histogram, without materialising per-message
+    ranks: ``c`` messages rank-balanced over ``q`` live edges cross in
+    rounds r//q + 1 for ranks r = 0..c-1, totalling
+
+        T(c, q) = q * k(k-1)/2 + rem * k + c,   k = c // q, rem = c % q,
+
+    with max round ceil(c / q).  Returns ``(rounds_total, max_rounds)``.
+    """
+    c = np.asarray(counts, dtype=np.int64)
+    if c.size == 0:
+        return 0, 0
+    q = np.broadcast_to(np.asarray(live_edges, dtype=np.int64), c.shape)
+    if (q <= 0).any():
+        raise UnroutableError("bundle with zero live edges carried messages")
+    k = c // q
+    rem = c - k * q
+    total = int((q * (k * (k - 1) // 2) + rem * k + c).sum())
+    max_rounds = int(((c + q - 1) // q).max(initial=0))
+    return total, max_rounds
 
 
 def sample_gateways_faulty(

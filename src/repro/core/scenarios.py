@@ -32,15 +32,17 @@ import numpy as np
 
 from .analysis import all_to_all_comparison
 from .routing import flood_route
+from .sim_engine import get_engine
 from .simulator import SimulationResult, simulate_point_to_point
 from .topology import CLEXTopology, FaultSet, TorusTopology, digit
-from .torus_sim import TorusSimResult, simulate_torus_dor
+from .torus_sim import TorusSimResult
 
 __all__ = [
     "TrafficScenario",
     "SCENARIOS",
     "AllToAllResult",
     "make_traffic",
+    "iter_traffic",
     "run_clex_scenario",
     "run_torus_scenario",
     "scenario_matrix",
@@ -169,6 +171,23 @@ def make_traffic(topo, scenario: "TrafficScenario | str", msgs_per_node: int,
     return np.asarray(src, dtype=np.int64), np.asarray(dst, dtype=np.int64)
 
 
+def iter_traffic(topo, scenario: "TrafficScenario | str", msgs_per_node: int,
+                 rng: "np.random.Generator | int" = 0, chunk_size: int = 1 << 20):
+    """Chunk-yielding traffic iterator: ``(start, src_chunk, dst_chunk)``
+    views over the scenario's endpoint arrays, for callers that feed a
+    streaming consumer (ingest pipelines, external replayers).
+
+    The endpoints themselves are drawn once — they are O(n_messages)
+    int64, which is the one per-message array the streaming engines keep;
+    chunk boundaries never change the traffic, mirroring the engines'
+    chunk-size-invariance contract."""
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    src, dst = make_traffic(topo, scenario, msgs_per_node, rng)
+    for start in range(0, src.shape[0], chunk_size):
+        yield start, src[start : start + chunk_size], dst[start : start + chunk_size]
+
+
 def _resolve_valiant(topo: CLEXTopology, scenario: TrafficScenario,
                      valiant: "str | int | bool | None") -> "int | None":
     if valiant == "auto":
@@ -189,14 +208,16 @@ def run_clex_scenario(
     valiant: "str | int | bool | None" = "auto",
     faults: FaultSet | None = None,
     audit: bool = False,
+    engine="golden",
 ) -> SimulationResult:
     """Drive the CLEX simulator through a scenario.  ``valiant='auto'`` uses
     the scenario's recommended randomization; ``False`` disables it; an int
-    or ``'global'`` forces a level."""
+    or ``'global'`` forces a level.  ``engine`` picks the simulator engine
+    ('golden', 'streaming', or a :class:`~.sim_engine.SimEngine`)."""
     if isinstance(scenario, str):
         scenario = SCENARIOS[scenario]
     src, dst = make_traffic(topo, scenario, msgs_per_node, np.random.default_rng(seed))
-    return simulate_point_to_point(
+    return get_engine(engine).run_clex(
         topo, msgs_per_node, mode=mode, seed=seed + 1, src=src, dst=dst,
         valiant_level=_resolve_valiant(topo, scenario, valiant),
         faults=faults, audit=audit,
@@ -209,13 +230,18 @@ def run_torus_scenario(
     msgs_per_node: int = 4,
     seed: int = 0,
     max_rounds: int = 100000,
-) -> TorusSimResult:
-    """Drive the torus DOR baseline through the same scenario."""
+    engine="golden",
+):
+    """Drive the torus DOR baseline through the same scenario.  The golden
+    engine returns :class:`~.torus_sim.TorusSimResult` (realised queueing
+    rounds); the streaming engine :class:`~.torus_sim.TorusStreamResult`
+    (exact hops + link-load / completion lower bounds)."""
     if isinstance(scenario, str):
         scenario = SCENARIOS[scenario]
     src, dst = make_traffic(topo, scenario, msgs_per_node, np.random.default_rng(seed))
-    return simulate_torus_dor(topo, msgs_per_node, seed=seed + 1, src=src, dst=dst,
-                              max_rounds=max_rounds)
+    return get_engine(engine).run_torus(
+        topo, msgs_per_node, seed=seed + 1, src=src, dst=dst, max_rounds=max_rounds,
+    )
 
 
 def scenario_matrix(
@@ -226,15 +252,18 @@ def scenario_matrix(
     seed: int = 0,
     scenarios: "list[str] | None" = None,
     faults: FaultSet | None = None,
+    engine="golden",
 ) -> list[dict]:
     """CLEX vs torus across scenarios: one row per scenario with the plain
     CLEX run, the Valiant-randomized run (where the scenario recommends
-    one), and the torus DOR baseline."""
+    one), and the torus DOR baseline.  With ``engine='streaming'`` the
+    torus columns switch to the exact-hops / completion-lower-bound form
+    (no realised queueing schedule at paper scale)."""
     rows = []
     for name in scenarios or list(SCENARIOS):
         sc = SCENARIOS[name]
         plain = run_clex_scenario(clex, sc, msgs_per_node, mode, seed,
-                                  valiant=False, faults=faults)
+                                  valiant=False, faults=faults, engine=engine)
         row = {
             "scenario": name,
             "n_messages": plain.n_messages,
@@ -245,20 +274,29 @@ def scenario_matrix(
         }
         if sc.valiant_level is not None:
             val = run_clex_scenario(clex, sc, msgs_per_node, mode, seed,
-                                    valiant="auto", faults=faults)
+                                    valiant="auto", faults=faults, engine=engine)
             row.update({
                 "clex_valiant_sum_avg_rds": round(val.sum_avg_rounds, 2),
                 "clex_valiant_max_rds_l1": val.levels[1].max_rounds,
                 "clex_valiant_max_load_l1": round(val.levels[1].max_avg_load, 2),
             })
-        tor = run_torus_scenario(torus, sc, msgs_per_node, seed)
-        row.update({
-            "torus_avg_rds": round(tor.avg_rounds, 2),
-            "torus_max_rds": tor.max_rounds,
-            "torus_congestion": round(tor.congestion_overhead, 2),
-            "rounds_gain_vs_torus": round(
-                tor.avg_rounds / max(plain.sum_avg_rounds, 1e-9), 2),
-        })
+        tor = run_torus_scenario(torus, sc, msgs_per_node, seed, engine=engine)
+        if isinstance(tor, TorusSimResult):
+            row.update({
+                "torus_avg_rds": round(tor.avg_rounds, 2),
+                "torus_max_rds": tor.max_rounds,
+                "torus_congestion": round(tor.congestion_overhead, 2),
+                "rounds_gain_vs_torus": round(
+                    tor.avg_rounds / max(plain.sum_avg_rounds, 1e-9), 2),
+            })
+        else:
+            row.update({
+                "torus_avg_hops": round(tor.avg_hops, 2),
+                "torus_max_link_load": tor.max_link_load,
+                "torus_rounds_lb": tor.completion_rounds_lb,
+                "rounds_gain_vs_torus_lb": round(
+                    tor.completion_rounds_lb / max(plain.sum_avg_rounds, 1e-9), 2),
+            })
         rows.append(row)
     return rows
 
@@ -424,6 +462,7 @@ def fault_degradation_curve(
     seed: int = 0,
     edge_rate: "float | None" = None,
     scenario: str = "uniform",
+    engine="golden",
 ) -> list[dict]:
     """Delivery and degradation vs injected fault rate: the inherent-fault-
     tolerance demonstration.  Every row asserts 100% delivery of live-pair
@@ -438,7 +477,8 @@ def fault_degradation_curve(
             edge_rate=rate if edge_rate is None else edge_rate, rng=rng,
         )
         res = run_clex_scenario(
-            topo, scenario, msgs_per_node, mode, seed, valiant=False, faults=faults
+            topo, scenario, msgs_per_node, mode, seed, valiant=False, faults=faults,
+            engine=engine,
         )
         if base_rounds is None:
             base_rounds = res.sum_avg_rounds

@@ -1,0 +1,136 @@
+"""The simulator engine seam: one interface, two engines.
+
+Everything that consumes simulation results (scenarios, benchmarks,
+reports, tests) talks to a :class:`SimEngine`; which machine actually
+routes the traffic is a knob:
+
+* :class:`GoldenEngine` — the per-message numpy machine of
+  :mod:`.simulator` / :mod:`.torus_sim`.  Exact reference semantics,
+  audit traces, frozen golden tables; O(n * msgs) state, so small n only.
+
+* :class:`StreamingEngine` — the paper-scale chunked machine of
+  :mod:`.streaming`.  Fixed-size message chunks, counter-based hashed
+  RNG (bit-identical results across chunk sizes), count-histogram
+  statistics; runs the paper's n = 10^6 experiment on a CPU in minutes.
+
+``get_engine("golden"|"streaming")`` resolves the knob; passing an engine
+instance through is allowed so callers can carry a custom chunk size.
+"""
+
+from __future__ import annotations
+
+import abc
+
+import numpy as np
+
+from .simulator import SimulationResult, simulate_point_to_point
+from .streaming import DEFAULT_CHUNK, simulate_point_to_point_streaming
+from .topology import CLEXTopology, FaultSet, TorusTopology
+from .torus_sim import (
+    TorusSimResult,
+    TorusStreamResult,
+    simulate_torus_dor,
+    simulate_torus_dor_streaming,
+)
+
+__all__ = ["SimEngine", "GoldenEngine", "StreamingEngine", "get_engine"]
+
+
+class SimEngine(abc.ABC):
+    """Routing/statistics contract extracted from ``ClexMachine`` +
+    ``simulate_point_to_point``: run a whole scenario, return the Tables
+    I-IV statistics object."""
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def run_clex(
+        self,
+        topo: CLEXTopology,
+        msgs_per_node: int,
+        mode: str = "dense",
+        seed: int = 0,
+        src: np.ndarray | None = None,
+        dst: np.ndarray | None = None,
+        valiant_level: int | None = None,
+        faults: FaultSet | None = None,
+        audit: bool = False,
+    ) -> SimulationResult:
+        """Route point-to-point traffic through A(L) on ``topo``."""
+
+    @abc.abstractmethod
+    def run_torus(
+        self,
+        topo: TorusTopology,
+        msgs_per_node: int,
+        seed: int = 0,
+        src: np.ndarray | None = None,
+        dst: np.ndarray | None = None,
+        max_rounds: int = 100000,
+    ) -> TorusSimResult | TorusStreamResult:
+        """Route the same traffic through the DOR torus baseline."""
+
+
+class GoldenEngine(SimEngine):
+    """The per-message reference machine (exact semantics, small n)."""
+
+    name = "golden"
+
+    def run_clex(self, topo, msgs_per_node, mode="dense", seed=0, src=None, dst=None,
+                 valiant_level=None, faults=None, audit=False):
+        return simulate_point_to_point(
+            topo, msgs_per_node, mode=mode, seed=seed, src=src, dst=dst,
+            valiant_level=valiant_level, faults=faults, audit=audit,
+        )
+
+    def run_torus(self, topo, msgs_per_node, seed=0, src=None, dst=None,
+                  max_rounds=100000):
+        return simulate_torus_dor(
+            topo, msgs_per_node, seed=seed, max_rounds=max_rounds, src=src, dst=dst,
+        )
+
+
+class StreamingEngine(SimEngine):
+    """The paper-scale chunked machine (see :mod:`.streaming`)."""
+
+    name = "streaming"
+
+    def __init__(self, chunk_size: int = DEFAULT_CHUNK):
+        if chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+        self.chunk_size = chunk_size
+
+    def run_clex(self, topo, msgs_per_node, mode="dense", seed=0, src=None, dst=None,
+                 valiant_level=None, faults=None, audit=False):
+        return simulate_point_to_point_streaming(
+            topo, msgs_per_node, mode=mode, seed=seed, src=src, dst=dst,
+            valiant_level=valiant_level, faults=faults, audit=audit,
+            chunk_size=self.chunk_size,
+        )
+
+    def run_torus(self, topo, msgs_per_node, seed=0, src=None, dst=None,
+                  max_rounds=100000):
+        return simulate_torus_dor_streaming(
+            topo, msgs_per_node, seed=seed, src=src, dst=dst,
+            chunk_size=max(1, min(self.chunk_size, 1 << 18)),
+        )
+
+
+_ENGINES: dict[str, type[SimEngine]] = {
+    "golden": GoldenEngine,
+    "streaming": StreamingEngine,
+}
+
+
+def get_engine(engine: str | SimEngine) -> SimEngine:
+    """Resolve the ``engine=`` knob: a name from {'golden', 'streaming'}
+    or a ready :class:`SimEngine` instance (passed through)."""
+    if isinstance(engine, SimEngine):
+        return engine
+    try:
+        return _ENGINES[engine]()
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown engine {engine!r}: expected one of {sorted(_ENGINES)} "
+            "or a SimEngine instance"
+        ) from None

@@ -53,6 +53,20 @@ __all__ = [
 ]
 
 
+def grow_hist(hist: np.ndarray, min_len: int) -> np.ndarray:
+    """Return ``hist`` grown (by doubling, zero-filled) to hold at least
+    ``min_len`` entries.  Shared by both engines so phase histograms use the
+    same growth policy."""
+    if min_len <= hist.shape[0]:
+        return hist
+    new_len = hist.shape[0]
+    while new_len < min_len:
+        new_len *= 2
+    out = np.zeros(new_len, dtype=hist.dtype)
+    out[: hist.shape[0]] = hist
+    return out
+
+
 @dataclasses.dataclass
 class LevelStats:
     level: int
@@ -93,6 +107,9 @@ class SimulationResult:
     n_dropped_dead: int = 0  # messages dropped for a dead source/destination
     fault_summary: dict | None = None  # FaultSet.describe() of the injected faults
     audit: dict | None = None  # traversal trace (audit=True runs only)
+    engine: str = "golden"  # which engine produced the result
+    chunk_size: int | None = None  # streaming engine chunk size (None = golden)
+    edge_load: dict | None = None  # streaming: per-level bundle-edge load summary
 
     def table(self) -> list[dict]:
         return [self.levels[l].row() for l in sorted(self.levels)]
@@ -112,8 +129,10 @@ class SimulationResult:
     @property
     def delivered_fraction(self) -> float:
         """Fraction of live-pair messages delivered — 1.0 by construction
-        (the simulator raises :class:`UnroutableError` otherwise)."""
-        return 1.0 if self.n_messages else 0.0
+        (the simulator raises :class:`UnroutableError` otherwise).  Zero
+        live-pair messages (e.g. every endpoint dead) is vacuous delivery,
+        not total failure."""
+        return 1.0
 
 
 def uniform_permutation_traffic(
@@ -182,7 +201,7 @@ class ClexMachine:
         )
 
     # -- A(1): parallel randomized load balancing on all cliques at once ---
-    def lb_call(self, cur: np.ndarray, dest: np.ndarray) -> np.ndarray:
+    def lb_call(self, cur: np.ndarray, dest: np.ndarray, gidx=None, key=None) -> np.ndarray:
         m = self.topo.m
         n = self.topo.n
         st = self.stats[1]
@@ -225,7 +244,7 @@ class ClexMachine:
             if phase >= len(self.copies):
                 self.copies.append(max(self.copies[-1], 1))
             if phase >= self.phase_hist.shape[0]:
-                self.phase_hist = np.pad(self.phase_hist, (0, self.phase_hist.shape[0]))
+                self.phase_hist = grow_hist(self.phase_hist, phase + 1)
             c = max(self.copies[phase], 1)
             idx = np.flatnonzero(remaining)
             msg_of_copy = np.repeat(idx, c)
@@ -290,7 +309,7 @@ class ClexMachine:
         return dest.copy()
 
     # -- Step 2 of A(level): bundle hop ------------------------------------
-    def hop_call(self, cur: np.ndarray, dest: np.ndarray, level: int) -> np.ndarray:
+    def hop_call(self, cur: np.ndarray, dest: np.ndarray, level: int, gidx=None, key=None) -> np.ndarray:
         st = self.stats[level]
         new, rounds = bundle_hop(
             self.topo, cur, dest, level, self.rng,
@@ -302,13 +321,39 @@ class ClexMachine:
         st.max_rounds = max(st.max_rounds, int(rounds.max(initial=0)))
         return new
 
-    def record_load(self, cur: np.ndarray, level: int) -> None:
+    def record_load(self, cur: np.ndarray, level: int, gidx=None, key=None) -> None:
         """Per-A(level)-call load: messages handled / nodes of the instance."""
         st = self.stats[level]
         span = self.topo.m**level
         inst = cur // span
         _, counts = np.unique(inst, return_counts=True)
         st.max_avg_load = max(st.max_avg_load, float(counts.max(initial=0)) / span)
+
+    # -- routing-primitive hooks used by the shared _route driver ----------
+    # The ``gidx``/``key`` kwargs are the streaming engine's chunk-alignment
+    # handles (global message indices + stable call-path keys); the golden
+    # machine draws from its sequential Generator and ignores them, keeping
+    # its RNG stream byte-identical to the pre-seam simulator.
+    def gateways(self, cur: np.ndarray, dest: np.ndarray, level: int, gidx=None, key=None) -> np.ndarray:
+        return sample_gateways(self.topo, cur, dest, level, self.rng)
+
+    def gateways_faulty(
+        self, cur: np.ndarray, target_copy: np.ndarray, level: int, gidx=None, key=None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        return sample_gateways_faulty(self.topo, cur, target_copy, level, self.rng, self.faults)
+
+    def detours(
+        self, cur: np.ndarray, tgt: np.ndarray, level: int, gidx=None, key=None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        return _sample_detours(self.topo, cur, tgt, level, self.rng, self.faults)
+
+    def count_detours(self, level: int, n: int) -> None:
+        self.stats[level].detours += n
+
+    def valiant_mid(self, src: np.ndarray, within_level: int | None, gidx=None) -> np.ndarray:
+        from .routing import valiant_intermediate
+
+        return valiant_intermediate(self.topo, src, self.rng, within_level=within_level, faults=self.faults)
 
 
 # historical name of ClexMachine, kept for callers of the private API
@@ -353,6 +398,58 @@ def _sample_detours(
             f"level-{level} copy unreachable: faults disconnect the copy graph"
         )
     return out_t, out_g
+
+
+def _route(machine, level: int, cur: np.ndarray, dest: np.ndarray, gidx: np.ndarray, key: str) -> np.ndarray:
+    """Recursive driver of A(level), shared by both engines.
+
+    The machine supplies the routing primitives (lb_call / hop_call /
+    gateway sampling / load recording); this function owns the A(l) =
+    A(l-1), HOP_l, A(l-1) recursion and the fault-detour control flow.
+    ``gidx`` carries each message's global index and ``key`` a stable
+    call-path key ("a"/"b" per recursion branch, "i<k>" per detour
+    iteration) so a chunked machine can align its accumulators and hashed
+    RNG draws across chunks; the golden machine ignores both.
+    """
+    if level > 1:
+        machine.record_load(cur, level, gidx=gidx, key=key)
+    if level == 1:
+        return machine.lb_call(cur, dest, gidx=gidx, key=key)
+    topo = machine.topo
+    if machine.faults is None:
+        gw = machine.gateways(cur, dest, level, gidx=gidx, key=key)
+        cur = _route(machine, level - 1, cur, gw, gidx, key + "a")
+        cur = machine.hop_call(cur, dest, level, gidx=gidx, key=key)
+        return _route(machine, level - 1, cur, dest, gidx, key + "b")
+    # fault-aware: every message crosses the level once (as in the paper's
+    # algorithm); messages whose direct gateway is unreachable detour
+    # through a sibling copy and retry, so stragglers may take extra
+    # crossings.  Only the stragglers re-enter the recursion.
+    cur = cur.copy()
+    crossed = np.zeros(cur.shape[0], dtype=bool)
+    for it in range(_MAX_DETOUR_ITERS):
+        if crossed.all():
+            break
+        idx = np.flatnonzero(~crossed)
+        sub_cur, sub_dest, sub_gidx = cur[idx], dest[idx], gidx[idx]
+        tgt = digit(sub_dest, level - 1, topo.m)
+        ikey = key + f"i{it}"
+        gw, stuck = machine.gateways_faulty(sub_cur, tgt, level, gidx=sub_gidx, key=ikey)
+        if stuck.any():
+            det_t, det_g = machine.detours(
+                sub_cur[stuck], tgt[stuck], level, gidx=sub_gidx[stuck], key=ikey
+            )
+            tgt[stuck], gw[stuck] = det_t, det_g
+            machine.count_detours(level, int(stuck.sum()))
+        sub_cur = _route(machine, level - 1, sub_cur, gw, sub_gidx, ikey + "a")
+        synth_dest = with_digit(sub_cur, level - 1, topo.m, tgt)
+        cur[idx] = machine.hop_call(sub_cur, synth_dest, level, gidx=sub_gidx, key=ikey + "h")
+        crossed[idx] = ~stuck
+    if not crossed.all():
+        raise UnroutableError(
+            f"level-{level} crossings did not converge in {_MAX_DETOUR_ITERS} detour iterations"
+        )
+    return _route(machine, level - 1, cur, dest, gidx, key + "b")
 
 
 def _ranks_within(keys: np.ndarray, rng: np.random.Generator) -> np.ndarray:
@@ -420,52 +517,13 @@ def simulate_point_to_point(
     for st in machine.stats.values():
         st.n_messages = nmsg
 
-    def run(level: int, cur: np.ndarray, dest: np.ndarray) -> np.ndarray:
-        machine.record_load(cur, level) if level > 1 else None
-        if level == 1:
-            return machine.lb_call(cur, dest)
-        if faults is None:
-            gw = sample_gateways(topo, cur, dest, level, rng)
-            cur = run(level - 1, cur, gw)
-            cur = machine.hop_call(cur, dest, level)
-            return run(level - 1, cur, dest)
-        # fault-aware: every message crosses the level once (as in the
-        # paper's algorithm); messages whose direct gateway is unreachable
-        # detour through a sibling copy and retry, so stragglers may take
-        # extra crossings.  Only the stragglers re-enter the recursion.
-        cur = cur.copy()
-        crossed = np.zeros(cur.shape[0], dtype=bool)
-        for _ in range(_MAX_DETOUR_ITERS):
-            if crossed.all():
-                break
-            idx = np.flatnonzero(~crossed)
-            sub_cur, sub_dest = cur[idx], dest[idx]
-            tgt = digit(sub_dest, level - 1, topo.m)
-            gw, stuck = sample_gateways_faulty(topo, sub_cur, tgt, level, rng, faults)
-            if stuck.any():
-                det_t, det_g = _sample_detours(
-                    topo, sub_cur[stuck], tgt[stuck], level, rng, faults
-                )
-                tgt[stuck], gw[stuck] = det_t, det_g
-                machine.stats[level].detours += int(stuck.sum())
-            sub_cur = run(level - 1, sub_cur, gw)
-            synth_dest = with_digit(sub_cur, level - 1, topo.m, tgt)
-            cur[idx] = machine.hop_call(sub_cur, synth_dest, level)
-            crossed[idx] = ~stuck
-        if not crossed.all():
-            raise UnroutableError(
-                f"level-{level} crossings did not converge in {_MAX_DETOUR_ITERS} detour iterations"
-            )
-        return run(level - 1, cur, dest)
-
+    gidx = np.arange(nmsg, dtype=np.int64)
     cur = src.copy()
     if valiant_level is not None:
-        from .routing import valiant_intermediate
-
         within = None if valiant_level >= topo.L else valiant_level
-        mid = valiant_intermediate(topo, src, rng, within_level=within, faults=faults)
-        cur = run(topo.L, cur, mid)
-    final = run(topo.L, cur, dst)
+        mid = machine.valiant_mid(src, within, gidx=gidx)
+        cur = _route(machine, topo.L, cur, mid, gidx, "v")
+    final = _route(machine, topo.L, cur, dst, gidx, "r")
     if not np.array_equal(final, dst):
         raise AssertionError("routing failed: some messages not delivered to their destination")
     if machine.audit is not None:

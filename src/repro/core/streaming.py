@@ -1,0 +1,605 @@
+"""Paper-scale streaming engine for CLEX point-to-point simulation.
+
+The golden engine (:mod:`.simulator`) materialises whole-machine
+per-message state: every A(1) phase expands relay copies with
+``np.repeat`` and ranks them with global ``argsort`` passes, so a
+million-node run with tens of messages per node is hours of sorting and
+tens of GB of transients.  This engine reaches n = 10^6 on a laptop-class
+CPU by splitting the work into two parts:
+
+* **Chunked position routing.**  Traffic is processed in fixed-size
+  message chunks through the same :func:`~.simulator._route` recursion as
+  the golden engine.  All per-message randomness (gateway lows, bundle
+  edges, Valiant intermediates, fault detours) comes from a counter-based
+  hash — splitmix64 over (seed, call-path key, stage, global message
+  index) — so a message's path is a pure function of its index and the
+  chunk size never changes any result.
+
+* **Count-histogram statistics.**  Instead of per-message ranks and
+  sorts, each A(1) / bundle-hop call batch accumulates `np.bincount`
+  histograms keyed by its call-path key: messages-per-destination,
+  distinct (sender, destination) pairs (a bitset), messages-per-gateway,
+  messages-per-instance.  A finalize pass then reconstructs the exact
+  golden round accounting: bundle rounds come from the closed form
+  :func:`~.routing.bundle_rounds_from_counts` (rank-balancing makes the
+  round total a function of the counts alone), and the A(1) relay phases
+  are replayed once, globally, over only the *remaining* messages (those
+  not delivered by the phase-1 direct send) — a tiny fraction of traffic.
+
+Peak memory is O(chunk + per-level counters) = O(chunk + n) int64s,
+independent of msgs_per_node; the per-message relay-copy blowup of the
+golden engine never materialises.
+
+Statistical contract vs golden (see tests/test_engines.py): n_messages,
+delivered_fraction, drops, detour-free hop counts, and phase-1/relay
+dynamics are exact-in-distribution; randomized aggregates (avg/max
+rounds, max_avg_load) agree within tight tolerance at small n and are
+governed by the same process at scale.  ``audit=True`` is a golden-only
+feature (per-message traces are exactly what streaming avoids keeping).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+
+import numpy as np
+
+from .routing import (
+    UnroutableError,
+    bundle_edge_targets,
+    bundle_rounds_from_counts,
+    copy_schedule,
+)
+from .simulator import (
+    LevelStats,
+    SimulationResult,
+    _route,
+    grow_hist,
+    uniform_permutation_traffic,
+)
+from .topology import CLEXTopology, FaultSet, copy_index
+
+__all__ = ["DEFAULT_CHUNK", "simulate_point_to_point_streaming"]
+
+DEFAULT_CHUNK = 1 << 20
+
+
+# --------------------------------------------------------------- hashed RNG
+_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer: a bijective avalanche over uint64."""
+    x = x ^ (x >> np.uint64(30))
+    x = x * _MIX1
+    x = x ^ (x >> np.uint64(27))
+    x = x * _MIX2
+    return x ^ (x >> np.uint64(31))
+
+
+def _salt(seed: int, *parts) -> np.uint64:
+    """Stable 64-bit salt from (seed, call key, stage) — blake2b, not
+    ``hash()``, so results do not depend on PYTHONHASHSEED."""
+    h = hashlib.blake2b(repr((seed,) + parts).encode(), digest_size=8).digest()
+    return np.uint64(int.from_bytes(h, "little"))
+
+
+def _hash_u01(gidx: np.ndarray, salt: np.uint64) -> np.ndarray:
+    """Uniform [0, 1) per global message index — counter-based, so the
+    draw for message i is identical whatever chunk it arrives in."""
+    h = _mix64(gidx.astype(np.uint64) * _GAMMA + salt)
+    return (h >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
+
+
+def _hash_randint(gidx: np.ndarray, bound, salt: np.uint64) -> np.ndarray:
+    """Uniform integers in [0, bound) per global message index; ``bound``
+    may be a scalar or a per-message array."""
+    u = _hash_u01(gidx, salt)
+    b = np.asarray(bound, dtype=np.int64)
+    return np.minimum((u * b).astype(np.int64), b - 1)
+
+
+# ------------------------------------------------------------- accumulators
+class _LbAcc:
+    """Per-A(1)-call-batch histograms (one instance per call-path key)."""
+
+    def __init__(self, n: int, m: int):
+        self.cnt = np.zeros(n, dtype=np.int64)  # messages per destination
+        self.self_cnt: np.ndarray | None = None  # self-delivered per destination
+        self.u_cnt = np.zeros(n, dtype=np.int64)  # distinct (sender, dest) pairs per dest
+        self.pair_bits = np.zeros((n * m + 7) // 8, dtype=np.uint8)
+
+
+class _HopAcc:
+    """Per-bundle-hop-call-batch histogram."""
+
+    def __init__(self, n: int, level: int):
+        self.level = level
+        self.gw_cnt = np.zeros(n, dtype=np.int64)  # messages per gateway
+
+
+class _LoadAcc:
+    """Per-A(level>1)-call-batch instance load histogram."""
+
+    def __init__(self, n_inst: int, level: int):
+        self.level = level
+        self.inst_cnt = np.zeros(n_inst, dtype=np.int64)
+
+
+def _bitmap_test_and_set(bits: np.ndarray, keys: np.ndarray) -> np.ndarray:
+    """Mark ``keys`` (pre-deduplicated) in the bitset; returns the mask of
+    keys that were not yet set.  Order-independent, so chunk boundaries
+    never change which key counts as 'first seen'."""
+    byte = keys >> 3
+    bit = (keys & 7).astype(np.uint8)
+    fresh = ((bits[byte] >> bit) & np.uint8(1)) == 0
+    np.bitwise_or.at(bits, byte[fresh], np.uint8(1) << bit[fresh])
+    return fresh
+
+
+class _StreamState:
+    """Global accumulators shared by all chunks of one simulation run."""
+
+    def __init__(self, topo: CLEXTopology, mode: str, seed: int, faults: FaultSet | None,
+                 max_phases: int = 50):
+        self.topo = topo
+        self.mode = mode
+        self.seed = seed
+        self.faults = faults
+        self.max_phases = max_phases
+        self.lb_accs: dict[str, _LbAcc] = {}
+        self.hop_accs: dict[str, _HopAcc] = {}
+        self.load_accs: dict[str, _LoadAcc] = {}
+        self.detours: dict[int, int] = {}
+        self._salts: dict[tuple, np.uint64] = {}
+
+    def salt(self, *parts) -> np.uint64:
+        try:
+            return self._salts[parts]
+        except KeyError:
+            s = self._salts[parts] = _salt(self.seed, *parts)
+            return s
+
+    def lb(self, key: str) -> _LbAcc:
+        acc = self.lb_accs.get(key)
+        if acc is None:
+            acc = self.lb_accs[key] = _LbAcc(self.topo.n, self.topo.m)
+        return acc
+
+    def hop(self, key: str, level: int) -> _HopAcc:
+        acc = self.hop_accs.get(key)
+        if acc is None:
+            acc = self.hop_accs[key] = _HopAcc(self.topo.n, level)
+        return acc
+
+    def load(self, key: str, level: int) -> _LoadAcc:
+        acc = self.load_accs.get(key)
+        if acc is None:
+            acc = self.load_accs[key] = _LoadAcc(self.topo.n // self.topo.m**level, level)
+        return acc
+
+    # ------------------------------------------------------------ finalize
+    def finalize(self, nmsg: int) -> tuple[dict[int, LevelStats], np.ndarray, dict]:
+        topo = self.topo
+        stats = {l: LevelStats(l) for l in range(1, topo.L + 1)}
+        for st in stats.values():
+            st.n_messages = nmsg
+        for level, k in self.detours.items():
+            stats[level].detours = k
+        phase_hist = np.zeros(self.max_phases + 1, dtype=np.int64)
+        copies = copy_schedule(topo.m, self.max_phases)
+        live_m = self._live_members_per_clique()
+        for key in sorted(self.lb_accs):
+            phase_hist = _finalize_lb(
+                self, self.lb_accs[key], key, stats[1], phase_hist, copies, live_m
+            )
+        edge_load: dict[int, dict] = {}
+        for key in sorted(self.hop_accs):
+            _finalize_hop(self, self.hop_accs[key], stats, edge_load)
+        for acc in self.load_accs.values():
+            span = topo.m ** acc.level
+            stats[acc.level].max_avg_load = max(
+                stats[acc.level].max_avg_load,
+                float(acc.inst_cnt.max(initial=0)) / span,
+            )
+        return stats, phase_hist, edge_load
+
+    def _live_members_per_clique(self) -> np.ndarray | None:
+        if self.faults is None:
+            return None
+        n, m = self.topo.n, self.topo.m
+        dead = np.bincount(self.faults.dead_nodes // m, minlength=n // m)
+        return m - dead
+
+
+def _finalize_lb(
+    state: _StreamState,
+    acc: _LbAcc,
+    key: str,
+    st: LevelStats,
+    phase_hist: np.ndarray,
+    copies: list[int],
+    live_m: np.ndarray | None,
+) -> np.ndarray:
+    """Replay the A(1) phase dynamics from the count histograms.
+
+    Phase 1 is exact: one winner per distinct (sender, destination) pair
+    (``u_cnt``).  The relay phases are then simulated globally over only
+    the remaining messages — identity-free (a remaining message is fully
+    described by its destination), with the golden engine's balanced-rank
+    relay assignment reproduced per clique.
+    """
+    topo = state.topo
+    n, m = topo.n, topo.m
+    cnt = acc.cnt
+    self_cnt = acc.self_cnt if acc.self_cnt is not None else 0
+    nonself = cnt - self_cnt
+    u = acc.u_cnt
+    remaining_d = nonself - u
+
+    clique_load = cnt.reshape(-1, m).sum(axis=1)
+    present = clique_load > 0
+
+    # phase 1: winners take 1 round / 1 hop each
+    total_u = int(u.sum())
+    st.rounds_total += float(total_u)
+    st.hops_total += float(total_u)
+    last_phase_d = (nonself > 0).astype(np.int64)  # per-dest last delivery phase
+
+    active = np.flatnonzero(remaining_d > 0)
+    dest_of = np.repeat(active, remaining_d[active])
+    rng = np.random.default_rng(
+        [state.seed & 0x7FFFFFFF, int(state.salt(key, "lbfin")) & 0x7FFFFFFF]
+    )
+    phase = 1
+    max_phase = int(nonself.sum()) + len(copies)
+    while dest_of.size:
+        phase += 1
+        if phase > max_phase:
+            raise RuntimeError("A(1) finalize failed to terminate (no phase progress)")
+        if phase >= len(copies):
+            copies.append(max(copies[-1], 1))
+        if phase >= phase_hist.shape[0]:
+            phase_hist = grow_hist(phase_hist, phase + 1)
+        c = max(copies[phase], 1)
+        R = dest_of.size
+        copy_dest = np.repeat(dest_of, c)
+        copy_msg = np.repeat(np.arange(R, dtype=np.int64), c)
+        copy_clique = copy_dest // m
+        # balanced-rank relay slots: random rank within each clique's copy
+        # pool, slot = rank % live members — the golden engine's spread
+        # (all-distinct when the pool fits, surplus u.a.r.)
+        order = np.lexsort((rng.random(copy_dest.shape[0]), copy_clique))
+        cc = copy_clique[order]
+        new_seg = np.empty(cc.shape[0], dtype=bool)
+        new_seg[0] = True
+        np.not_equal(cc[1:], cc[:-1], out=new_seg[1:])
+        idx = np.arange(cc.shape[0], dtype=np.int64)
+        seg_start = np.maximum.accumulate(np.where(new_seg, idx, 0))
+        rank_sorted = idx - seg_start
+        rank = np.empty_like(rank_sorted)
+        rank[order] = rank_sorted
+        pool = m if live_m is None else live_m[copy_clique]
+        slot = rank % pool
+        # one forward per (destination, relay slot); random winner via
+        # hashed priorities
+        fkey = copy_dest * np.int64(m) + slot
+        uk, inv = np.unique(fkey, return_inverse=True)
+        pri = rng.integers(0, np.iinfo(np.int64).max, size=fkey.shape[0], dtype=np.int64)
+        best = np.full(uk.shape[0], -1, dtype=np.int64)
+        np.maximum.at(best, inv, pri)
+        winner_copy = pri == best[inv]
+        delivered = np.zeros(R, dtype=bool)
+        delivered[copy_msg[winner_copy]] = True
+        ndel = int(delivered.sum())
+        st.rounds_total += float(ndel * (1 + 2 * (phase - 1)))
+        if state.mode == "light":
+            st.hops_total += float(copy_dest.shape[0] + uk.shape[0])
+            clique_load += np.bincount(copy_clique, minlength=clique_load.shape[0])
+        else:
+            st.hops_total += float(2 * ndel)
+            clique_load += np.bincount(
+                dest_of[delivered] // m, minlength=clique_load.shape[0]
+            )
+        last_phase_d[dest_of[delivered]] = phase
+        dest_of = dest_of[~delivered]
+
+    inst_last = last_phase_d.reshape(-1, m).max(axis=1)[present]
+    inst_rounds = np.where(inst_last <= 1, inst_last, 1 + 2 * (inst_last - 1))
+    st.max_rounds = max(st.max_rounds, int(inst_rounds.max(initial=0)))
+    st.max_avg_load = max(st.max_avg_load, float(clique_load.max(initial=0)) / m)
+    np.add.at(phase_hist, inst_last, 1)
+    return phase_hist
+
+
+def _finalize_hop(state: _StreamState, acc: _HopAcc, stats: dict[int, LevelStats],
+                  edge_load: dict[int, dict]) -> None:
+    """Exact bundle-round accounting from the gateway-count histogram."""
+    level = acc.level
+    st = stats[level]
+    occ = np.flatnonzero(acc.gw_cnt)
+    c = acc.gw_cnt[occ]
+    if state.faults is None:
+        q = state.topo.m
+        q_total = int(state.topo.m) * occ.shape[0]
+    else:
+        q_arr = state.faults.live_edge_mask(occ, level).sum(axis=1)
+        q = q_arr
+        q_total = int(q_arr.sum())
+    total, max_rounds = bundle_rounds_from_counts(c, q)
+    st.rounds_total += float(total)
+    st.hops_total += float(c.sum())
+    st.max_rounds = max(st.max_rounds, max_rounds)
+    summary = edge_load.setdefault(
+        level, {"max_edge_load": 0, "messages": 0, "bundles_used": 0, "live_edges": 0}
+    )
+    summary["max_edge_load"] = max(summary["max_edge_load"], max_rounds)
+    summary["messages"] += int(c.sum())
+    summary["bundles_used"] += occ.shape[0]
+    summary["live_edges"] += q_total
+
+
+# ------------------------------------------------------- streaming machine
+class _StreamingMachine:
+    """Chunk-shaped counterpart of :class:`~.simulator.ClexMachine`.
+
+    Every method takes (and is deterministic in) the global message
+    indices ``gidx`` and the call-path ``key`` supplied by ``_route``;
+    nothing here depends on chunk boundaries.
+    """
+
+    def __init__(self, state: _StreamState):
+        self.state = state
+        self.topo = state.topo
+        self.faults = state.faults
+
+    # -- A(1): accumulate count histograms, deliver logically --------------
+    def lb_call(self, cur: np.ndarray, dest: np.ndarray, gidx=None, key=None) -> np.ndarray:
+        if cur.shape[0] == 0:
+            return cur
+        st = self.state
+        n, m = self.topo.n, self.topo.m
+        acc = st.lb(key)
+        acc.cnt += np.bincount(dest, minlength=n)
+        self_msg = cur == dest
+        if self_msg.any():
+            if acc.self_cnt is None:
+                acc.self_cnt = np.zeros(n, dtype=np.int64)
+            acc.self_cnt += np.bincount(dest[self_msg], minlength=n)
+        ns = ~self_msg
+        if ns.any():
+            pair_key = dest[ns] * np.int64(m) + cur[ns] % m
+            uniq = np.unique(pair_key)
+            fresh = _bitmap_test_and_set(acc.pair_bits, uniq)
+            if fresh.any():
+                acc.u_cnt += np.bincount(uniq[fresh] // m, minlength=n)
+        return dest.copy()
+
+    # -- Step 2: positions now, rounds at finalize -------------------------
+    def hop_call(self, cur: np.ndarray, dest: np.ndarray, level: int, gidx=None, key=None) -> np.ndarray:
+        st = self.state
+        m = self.topo.m
+        acc = st.hop(key, level)
+        acc.gw_cnt += np.bincount(cur, minlength=self.topo.n)
+        b = (dest // m ** (level - 1)) % m  # digit(dest, level-1, m)
+        if self.faults is None:
+            edge = _hash_randint(gidx, m, st.salt(key, "edge"))
+        else:
+            gw_ids, gw_inv = np.unique(cur, return_inverse=True)
+            mask = st.faults.live_edge_mask(gw_ids, level)
+            q = mask.sum(axis=1)
+            if (q == 0).any():
+                raise UnroutableError(
+                    f"gateway with zero live level-{level} bundle edges selected"
+                )
+            # j-th live edge in column order, j hashed per message
+            live_order = np.argsort(~mask, kind="stable", axis=1)
+            j = _hash_randint(gidx, q[gw_inv], st.salt(key, "edge"))
+            edge = live_order[gw_inv, j]
+        return bundle_edge_targets(self.topo, cur, b, edge, level)
+
+    def record_load(self, cur: np.ndarray, level: int, gidx=None, key=None) -> None:
+        acc = self.state.load(key, level)
+        span = self.topo.m**level
+        acc.inst_cnt += np.bincount(cur // span, minlength=acc.inst_cnt.shape[0])
+
+    # -- gateway sampling: hashed instead of sequential --------------------
+    def gateways(self, cur: np.ndarray, dest: np.ndarray, level: int, gidx=None, key=None) -> np.ndarray:
+        m = self.topo.m
+        base = copy_index(cur, level - 1, m) * m ** (level - 1)
+        b = (dest // m ** (level - 1)) % m
+        low_span = m ** (level - 2)
+        if low_span > 1:
+            lows = _hash_randint(gidx, low_span, self.state.salt(key, "gw"))
+        else:
+            lows = 0
+        return base + b * low_span + lows
+
+    def gateways_faulty(
+        self, cur: np.ndarray, target_copy: np.ndarray, level: int, gidx=None, key=None,
+        max_tries: int = 8,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Hashed mirror of :func:`~.routing.sample_gateways_faulty`:
+        rejection-samples the free low digits per message (draw t keyed by
+        (key, t, gidx)), then checks the stragglers exhaustively, so
+        ``stuck`` is exact."""
+        st = self.state
+        topo = self.topo
+        faults = st.faults
+        m = topo.m
+        base = copy_index(cur, level - 1, m) * m ** (level - 1)
+        low_span = m ** (level - 2)
+        nmsg = cur.shape[0]
+
+        def ok(gw: np.ndarray) -> np.ndarray:
+            good = faults.node_alive(gw)
+            if good.any():
+                gw_ids, gw_inv = np.unique(gw, return_inverse=True)
+                good &= faults.live_edge_mask(gw_ids, level).any(axis=1)[gw_inv]
+            return good
+
+        if low_span > 1:
+            lows = _hash_randint(gidx, low_span, st.salt(key, "gwf", 0))
+        else:
+            lows = np.zeros(nmsg, dtype=np.int64)
+        gw = base + target_copy * low_span + lows
+        good = ok(gw)
+        tries = 1
+        while not good.all() and tries < max_tries and low_span > 1:
+            idx = np.flatnonzero(~good)
+            lows = _hash_randint(gidx[idx], low_span, st.salt(key, "gwf", tries))
+            cand = base[idx] + target_copy[idx] * low_span + lows
+            fixed = ok(cand)
+            gw[idx[fixed]] = cand[fixed]
+            good[idx[fixed]] = True
+            tries += 1
+        if not good.all():
+            idx = np.flatnonzero(~good)
+            pair_keys = base[idx] * np.int64(m) + target_copy[idx]
+            for pk in np.unique(pair_keys):
+                sel = idx[pair_keys == pk]
+                pbase, ptgt = pk // m, pk % m
+                cand = pbase + ptgt * low_span + np.arange(low_span, dtype=np.int64)
+                live = cand[ok(cand)]
+                if live.size:
+                    pick = _hash_randint(gidx[sel], live.size, st.salt(key, "gwx"))
+                    gw[sel] = live[pick]
+                    good[sel] = True
+        return gw, ~good
+
+    def detours(
+        self, cur: np.ndarray, tgt: np.ndarray, level: int, gidx=None, key=None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Hashed mirror of the golden ``_sample_detours``: try sibling
+        copies in a (seed, key)-derived order; per-message gateway choice
+        is hashed, so the outcome is chunk-independent."""
+        st = self.state
+        m = self.topo.m
+        nmsg = cur.shape[0]
+        out_t = np.full(nmsg, -1, dtype=np.int64)
+        out_g = np.zeros(nmsg, dtype=np.int64)
+        undone = np.arange(nmsg)
+        perm = np.random.default_rng(
+            [st.seed & 0x7FFFFFFF, int(st.salt(key, "detperm")) & 0x7FFFFFFF]
+        ).permutation(m)
+        for b in perm:
+            if undone.size == 0:
+                break
+            can_try = tgt[undone] != b
+            sub = undone[can_try]
+            if sub.size:
+                cand = np.full(sub.shape[0], b, dtype=np.int64)
+                gw, stuck = self.gateways_faulty(
+                    cur[sub], cand, level, gidx=gidx[sub], key=f"{key}d{b}"
+                )
+                okm = ~stuck
+                out_t[sub[okm]] = b
+                out_g[sub[okm]] = gw[okm]
+                undone = np.concatenate([undone[~can_try], sub[stuck]])
+            else:
+                undone = undone[~can_try]
+        if (out_t < 0).any():
+            raise UnroutableError(
+                f"level-{level} copy unreachable: faults disconnect the copy graph"
+            )
+        return out_t, out_g
+
+    def count_detours(self, level: int, n: int) -> None:
+        st = self.state
+        st.detours[level] = st.detours.get(level, 0) + n
+
+    def valiant_mid(self, src: np.ndarray, within_level: int | None, gidx=None) -> np.ndarray:
+        st = self.state
+        topo = self.topo
+
+        def draw(srcs: np.ndarray, idx: np.ndarray, t: int) -> np.ndarray:
+            if within_level is None:
+                return _hash_randint(idx, topo.n, st.salt("valiant", t))
+            span = topo.m**within_level
+            lows = _hash_randint(idx, span, st.salt("valiant", t))
+            return (srcs // span) * span + lows
+
+        mid = draw(src, gidx, 0)
+        if st.faults is not None:
+            for t in range(1, 64):
+                bad = ~st.faults.node_alive(mid)
+                if not bad.any():
+                    break
+                mid[bad] = draw(src[bad], gidx[bad], t)
+            if not st.faults.node_alive(mid).all():
+                raise UnroutableError("no live Valiant intermediate found")
+        return mid
+
+
+# ------------------------------------------------------------- entry point
+def simulate_point_to_point_streaming(
+    topo: CLEXTopology,
+    msgs_per_node: int,
+    mode: str = "dense",
+    seed: int = 0,
+    src: np.ndarray | None = None,
+    dst: np.ndarray | None = None,
+    valiant_level: int | None = None,
+    faults: FaultSet | None = None,
+    audit: bool = False,
+    chunk_size: int = DEFAULT_CHUNK,
+) -> SimulationResult:
+    """Streaming counterpart of :func:`~.simulator.simulate_point_to_point`.
+
+    Same traffic (bit-identical for the same seed), same recursion, same
+    statistics contract; results are bit-identical across ``chunk_size``
+    values.  See the module docstring for the memory/accuracy model.
+    """
+    if audit:
+        raise ValueError("audit traces require the golden engine")
+    if mode not in ("dense", "light"):
+        raise ValueError(mode)
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    rng = np.random.default_rng(seed)
+    if src is None or dst is None:
+        src, dst = uniform_permutation_traffic(topo, msgs_per_node, rng)
+    n_dropped = 0
+    if faults is not None:
+        live = faults.node_alive(src) & faults.node_alive(dst)
+        n_dropped = int((~live).sum())
+        src, dst = src[live], dst[live]
+    t0 = time.time()
+    state = _StreamState(topo, mode, seed, faults)
+    machine = _StreamingMachine(state)
+    nmsg = src.shape[0]
+    within = None
+    if valiant_level is not None:
+        within = None if valiant_level >= topo.L else valiant_level
+    for start in range(0, nmsg, chunk_size):
+        stop = min(start + chunk_size, nmsg)
+        gidx = np.arange(start, stop, dtype=np.int64)
+        cur = src[start:stop].copy()
+        if valiant_level is not None:
+            mid = machine.valiant_mid(src[start:stop], within, gidx=gidx)
+            cur = _route(machine, topo.L, cur, mid, gidx, "v")
+        final = _route(machine, topo.L, cur, dst[start:stop], gidx, "r")
+        if not np.array_equal(final, dst[start:stop]):
+            raise AssertionError(
+                "routing failed: some messages not delivered to their destination"
+            )
+    levels, phase_hist, edge_load = state.finalize(nmsg)
+    return SimulationResult(
+        topo=topo,
+        mode=mode,
+        msgs_per_node=msgs_per_node,
+        levels=levels,
+        lb_phase_histogram=phase_hist,
+        wall_seconds=time.time() - t0,
+        n_messages=nmsg,
+        n_dropped_dead=n_dropped,
+        fault_summary=faults.describe() if faults is not None else None,
+        audit=None,
+        engine="streaming",
+        chunk_size=chunk_size,
+        edge_load=edge_load,
+    )

@@ -29,6 +29,55 @@ def test_benchmarks_run_tiny_emits_wellformed_json(tmp_path, capsys):
     assert lines and all(len(l.split(",", 2)) == 3 for l in lines)
 
 
+def test_benchmarks_run_paper_scale_smoke(tmp_path, capsys):
+    """``--scale paper`` on shrunk knobs: the streaming-engine CLEX-vs-torus
+    run finishes within a tight wall-clock budget and writes a BENCH_sim.json
+    with the schema EXPERIMENTS.md renders (make bench-sim, CI smoke)."""
+    import time
+
+    from benchmarks.run import main
+
+    t0 = time.time()
+    res = main(["--scale", "paper", "--out", str(tmp_path),
+                "--paper-m", "8", "--paper-L", "3", "--paper-msgs", "4",
+                "--paper-torus-k", "8", "--paper-chunk", "4096"])
+    assert time.time() - t0 < 60  # shrunk run is seconds, not minutes
+    on_disk = json.loads((tmp_path / "BENCH_sim.json").read_text())
+    assert on_disk == json.loads(json.dumps(res, default=str))
+    assert on_disk["engine"] == "streaming"
+    assert on_disk["clex"]["n"] == 8**3 and on_disk["torus"]["n"] == 8**3
+    for row in on_disk["clex"]["rows"]:
+        assert {"lvl", "max_rds", "avg_rds", "max_avg_load", "avg_hops"} <= set(row)
+    assert {"bandwidth_utilization_factor", "hop_delay_reduction",
+            "propagation_ratio", "path_length_factor_vs_torus_hops"} == set(
+        on_disk["factors"])
+    assert on_disk["torus"]["completion_rounds_lb"] >= on_disk["torus"]["max_hops"]
+    assert on_disk["peak_rss_mb"] > 0
+    # no repo-root sync from a tmp outdir; CSV rows still emitted
+    lines = [l for l in capsys.readouterr().out.splitlines() if l.strip()]
+    assert any(l.startswith("paper_scale_clex_") for l in lines)
+    assert any(l.startswith("paper_scale_torus_") for l in lines)
+
+
+def test_make_report_renders_paper_scale_section(tmp_path, monkeypatch):
+    """When BENCH_sim.json sits next to bench_results.json, build_simulator
+    prepends the paper-scale section."""
+    from benchmarks.make_report import SIM_BEGIN, SIM_END, main
+    from benchmarks.run import main as run_main
+
+    run_main(["--tiny", "--out", str(tmp_path)])
+    # report generation also syncs BENCH_*.json to cwd — keep it in tmp
+    monkeypatch.chdir(tmp_path)
+    run_main(["--scale", "paper", "--out", str(tmp_path),
+              "--paper-m", "4", "--paper-L", "2", "--paper-msgs", "2",
+              "--paper-torus-k", "4", "--paper-chunk", "1024"])
+    report = tmp_path / "EXPERIMENTS.md"
+    main(path=str(report), results_path=str(tmp_path / "bench_results.json"))
+    sim = report.read_text().split(SIM_BEGIN, 1)[1].split(SIM_END, 1)[0]
+    assert "Paper scale (streaming engine" in sim
+    assert "bandwidth utilization factor" in sim
+
+
 def test_serving_bench_tiny_emits_wellformed_json(tmp_path):
     """serving_bench --tiny runs both engines on both workloads and writes
     BENCH_serving.json with the metric schema docs/SERVING.md documents."""

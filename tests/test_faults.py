@@ -176,6 +176,24 @@ def test_unroutable_raises_cleanly():
                                 faults=faults)
 
 
+@pytest.mark.parametrize("engine", ["golden", "streaming"])
+def test_all_dead_faultset_drops_everything_cleanly(engine):
+    """Regression: when *every* message is dropped (all nodes dead),
+    ``delivered_fraction`` must report 1.0 — zero live-pair messages were
+    lost — not 0.0.  The old ``n/or-1`` expression returned 0.0 and made
+    a fully-dead fabric look like total delivery failure of live traffic."""
+    from repro.core import get_engine
+
+    topo = CLEXTopology(4, 2)
+    faults = FaultSet(topo, dead_nodes=np.arange(topo.n))
+    res = get_engine(engine).run_clex(topo, 2, mode="dense", seed=0, faults=faults)
+    assert res.n_messages == 0
+    assert res.n_dropped_dead == topo.n * 2
+    assert res.delivered_fraction == 1.0
+    assert res.sum_avg_rounds == 0.0
+    assert all(r["avg_rds"] == 0.0 and r["avg_hops"] == 0.0 for r in res.table())
+
+
 def test_fault_free_faultset_matches_no_faults_qualitatively():
     """An empty FaultSet routes every message with the same hop structure as
     the fault-free path (levels >= 2 cross exactly once per message)."""

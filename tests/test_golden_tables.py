@@ -18,7 +18,11 @@ Regenerate with:
 
 import pytest
 
-from repro.core import CLEXTopology, simulate_point_to_point
+from repro.core import (
+    CLEXTopology,
+    simulate_point_to_point,
+    simulate_point_to_point_streaming,
+)
 
 GOLDEN = {
     (4, 2, "dense", 0, 3): [
@@ -42,11 +46,51 @@ GOLDEN = {
 }
 
 
+# Streaming-engine counterpart: the counter-based hash RNG draws a
+# different (equally valid) sample of the same routing distribution, so its
+# frozen values differ from GOLDEN while tracking the same structure.
+# Regenerate with the command above, swapping in
+# ``simulate_point_to_point_streaming``.
+GOLDEN_STREAMING = {
+    (4, 2, "dense", 0, 3): [
+        {"lvl": 1, "max_rds": 3, "avg_rds": 2.35, "max_avg_load": 4.25, "avg_hops": 1.96},
+        {"lvl": 2, "max_rds": 2, "avg_rds": 1.06, "max_avg_load": 3.0, "avg_hops": 1.0},
+    ],
+    (8, 2, "light", 1, 2): [
+        {"lvl": 1, "max_rds": 3, "avg_rds": 1.92, "max_avg_load": 2.38, "avg_hops": 1.79},
+        {"lvl": 2, "max_rds": 1, "avg_rds": 1.0, "max_avg_load": 2.0, "avg_hops": 1.0},
+    ],
+    (4, 3, "dense", 2, 2): [
+        {"lvl": 1, "max_rds": 3, "avg_rds": 4.06, "max_avg_load": 4.25, "avg_hops": 3.55},
+        {"lvl": 2, "max_rds": 2, "avg_rds": 2.03, "max_avg_load": 2.0, "avg_hops": 2.0},
+        {"lvl": 3, "max_rds": 2, "avg_rds": 1.02, "max_avg_load": 2.0, "avg_hops": 1.0},
+    ],
+    (8, 3, "light", 3, 2): [
+        {"lvl": 1, "max_rds": 3, "avg_rds": 4.05, "max_avg_load": 3.62, "avg_hops": 3.76},
+        {"lvl": 2, "max_rds": 1, "avg_rds": 2.0, "max_avg_load": 2.0, "avg_hops": 2.0},
+        {"lvl": 3, "max_rds": 1, "avg_rds": 1.0, "max_avg_load": 2.0, "avg_hops": 1.0},
+    ],
+}
+
+
 @pytest.mark.parametrize("key", sorted(GOLDEN), ids=lambda k: f"m{k[0]}L{k[1]}{k[2]}s{k[3]}")
 def test_small_instance_tables_frozen(key):
     m, L, mode, seed, msgs = key
     res = simulate_point_to_point(CLEXTopology(m, L), msgs, mode=mode, seed=seed)
     assert res.table() == GOLDEN[key]
+
+
+@pytest.mark.parametrize(
+    "key", sorted(GOLDEN_STREAMING), ids=lambda k: f"m{k[0]}L{k[1]}{k[2]}s{k[3]}"
+)
+def test_streaming_tables_frozen(key):
+    """Pins the streaming engine's own RNG stream (splitmix64-style hash
+    keyed by global message index): any change to the hash keys, the chunk
+    accumulators, or the finalize-time relay replay shifts these values."""
+    m, L, mode, seed, msgs = key
+    res = simulate_point_to_point_streaming(CLEXTopology(m, L), msgs, mode=mode, seed=seed)
+    assert res.table() == GOLDEN_STREAMING[key]
+    assert res.engine == "streaming"
 
 
 def test_row_schema_frozen():
