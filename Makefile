@@ -3,8 +3,8 @@ PYTEST ?= python -m pytest
 # Coverage gate: enforced whenever pytest-cov is importable (CI always
 # installs it via requirements-dev.txt; the pinned container may lack the
 # wheel, in which case verify runs without the gate rather than failing on
-# a missing plugin).  72 is a floor — raise it as coverage grows.
-COVFLAGS := $(shell python -c "import pytest_cov" 2>/dev/null && echo "--cov=repro --cov-fail-under=72")
+# a missing plugin).  73 is a floor — raise it as coverage grows.
+COVFLAGS := $(shell python -c "import pytest_cov" 2>/dev/null && echo "--cov=repro --cov-fail-under=73")
 
 .PHONY: verify verify-slow test deps linkcheck bench-training bench-serving bench-sim
 
@@ -34,11 +34,14 @@ BENCH_TRAINING_FLAGS ?=
 bench-training:
 	PYTHONPATH=src python -m benchmarks.training_bench $(BENCH_TRAINING_FLAGS)
 
-# Serving bench (docs/SERVING.md): continuous vs one-shot, plus the faulted
+# Serving bench (docs/SERVING.md): continuous vs one-shot, the faulted
 # open-loop scenarios (elastic orchestrated serving vs engine-restart
-# baseline).  Writes benchmarks/results/BENCH_serving.json and syncs the
-# repo-root copy.  CI smoke: make bench-serving BENCH_SERVING_FLAGS="--tiny --fault-only"
-BENCH_SERVING_FLAGS ?= --fault
+# baseline), and the tiered KV-cache pooling section (memory hierarchy vs
+# discard-on-evict).  Writes benchmarks/results/BENCH_serving.json and syncs
+# the repo-root copy.  CI smokes:
+#   make bench-serving BENCH_SERVING_FLAGS="--tiny --fault-only"
+#   make bench-serving BENCH_SERVING_FLAGS="--tiny --tiered-only"
+BENCH_SERVING_FLAGS ?= --fault --tiered
 bench-serving:
 	PYTHONPATH=src python -m benchmarks.serving_bench $(BENCH_SERVING_FLAGS)
 

@@ -11,6 +11,12 @@ Drives two workloads against both engines and writes
   one-shot baseline must wait to fill fixed batches (batching delay) and
   decode every batch to its longest budget (head-of-line blocking), which
   is exactly what continuous batching removes.
+* ``tiered`` (``--tiered``) — two-turn session workload against the tiered
+  KV-cache hierarchy (HBM slots -> host rows -> modeled pooled tier) vs the
+  discard-on-evict baseline: resident sessions per device, turn-2
+  time-to-first-token by tier (host/pooled wakeup vs cold re-prefill),
+  steady-state per-token decode latency, and the batched ``extract_all``
+  migration-pause micro-bench.
 * ``faulted_open_poisson`` (``--fault``) — the same open-loop stream with
   runtime faults injected mid-run (device loss; a straggling host).  The
   orchestrated engine (``runtime/serving_elastic.py``) migrates the live
@@ -161,6 +167,188 @@ def _run_one_shot(model, params, prompts, budgets, n_slots, max_len, arrivals=No
         "decode_steps": decode_slot_steps // max(n_slots, 1),
         "prefills": (n + n_slots - 1) // n_slots,
     }
+
+
+def _tiered_session_flow(model, params, *, tiered, slots, max_len, host,
+                         pooled, prompts, g1s, g2, seed=0):
+    """Two-turn session workload (docs/SERVING.md, memory hierarchy).
+
+    Turn 1: every session runs to completion — a tiered engine demotes the
+    finished cache row into the host/pooled hierarchy, the baseline discards
+    it.  Turn 2: sessions wake sequentially; a budget-1 probe isolates
+    time-to-first-token (wakeup = page the row back + one decode step vs
+    cold = re-prefill the full history), then the session decodes a full
+    turn for steady-state per-token latency.  Returns
+    (engine, peak resident sessions, [(tier, ttft_s)], per-token latencies).
+    """
+    from repro.runtime.serving import ContinuousBatchingEngine, TierConfig
+
+    tiers = TierConfig(host_sessions=host, pooled_sessions=pooled) if tiered else None
+    eng = ContinuousBatchingEngine(
+        model, params, n_slots=slots, max_len=max_len, seed=seed, tiers=tiers
+    )
+    rids = [eng.submit(p, g1s[i], session_id=(i if tiered else None))
+            for i, p in enumerate(prompts)]
+    out = eng.run()
+    decode_lat = []
+    for rid in rids:
+        req = eng.requests[rid]
+        if len(req.tokens_out) > 1:
+            decode_lat.append(
+                (req.t_done - req.t_first) / (len(req.tokens_out) - 1)
+            )
+    resident_peak = eng.pool.resident_sessions
+    histories = [np.concatenate([p, out[r]]) for p, r in zip(prompts, rids)]
+
+    ttft = []
+    # wake newest-first: host holds the most recently demoted sessions, so
+    # this probes real host wakeups before re-demotions churn the LRU order
+    # (oldest-first would spill every host row to pooled before its probe)
+    for i in reversed(range(len(histories))):
+        hist = histories[i]
+        tier = eng.pool.session_tier(i) if tiered else None
+        t0 = time.monotonic()
+        r = eng.submit(hist, 1, session_id=(i if tiered else None))
+        probe = eng.run()[r]
+        ttft.append((tier or "cold", time.monotonic() - t0))
+        hist = np.concatenate([hist, probe])
+        r = eng.submit(hist, g2, session_id=(i if tiered else None))
+        eng.run()
+        req = eng.requests[r]
+        if g2 > 1:
+            decode_lat.append((req.t_done - req.t_first) / (g2 - 1))
+    return eng, resident_peak, ttft, decode_lat
+
+
+def _migration_extract_bench(model, params, slots, max_len, reps=5):
+    """Per-slot ``extract`` loop vs the batched ``extract_all`` gather on a
+    full pool mid-decode — the migration pause ServingOrchestrator pays."""
+    from repro.runtime.serving import ContinuousBatchingEngine
+
+    eng = ContinuousBatchingEngine(model, params, n_slots=slots, max_len=max_len)
+    for i in range(slots):
+        eng.submit(np.full((8,), 7, np.int32), 16)
+    for _ in range(4):
+        eng.step(0.0)
+    act = eng.pool.active_slots()
+    eng.pool.extract_all(act)  # warm both paths off the clock
+    for s in act:
+        eng.pool.extract(s)
+    per, bat = [], []
+    for _ in range(reps):
+        t = time.monotonic()
+        for s in act:
+            eng.pool.extract(s)  # one slice + device->host sync per slot
+        per.append(time.monotonic() - t)
+        t = time.monotonic()
+        eng.pool.extract_all(act)  # one gather, one sync
+        bat.append(time.monotonic() - t)
+    per_s, bat_s = float(np.median(per)), float(np.median(bat))
+    return {
+        "slots": len(act),
+        "per_slot_s": per_s,
+        "batched_s": bat_s,
+        "speedup": per_s / bat_s if bat_s > 0 else 0.0,
+    }
+
+
+def _run_tiered(model, params, args, vocab, rng):
+    """Tiered KV-cache pooling vs the discard-on-evict baseline: resident
+    sessions per device, turn-2 TTFT by tier, steady-state decode latency,
+    and the batched-migration micro-bench."""
+    if args.tiny:
+        sessions, g2 = min(args.sessions, 6), 3
+        prompt_lo, prompt_hi, g1_lo, g1_hi = 4, 6, 2, 4
+    else:
+        # histories long enough (48-80 tokens) that a cold re-prefill is
+        # real work — that is exactly the cost the hierarchy avoids
+        sessions, g2 = args.sessions, 24
+        prompt_lo, prompt_hi, g1_lo, g1_hi = 24, 40, 24, 40
+    slots = args.slots
+    host = pooled = max(1, sessions // 2)
+    max_len = prompt_hi + g1_hi + 1 + g2 + 8
+    prompts, g1s = _workload(
+        rng, sessions, prompt_lo, prompt_hi, g1_lo, g1_hi, vocab
+    )
+    flow = dict(slots=slots, max_len=max_len, host=host, pooled=pooled,
+                prompts=prompts, g1s=g1s, g2=g2)
+    # warm pass: identical flow on throwaway engines (shared jit cache keyed
+    # by model/slots/capacity/seed), so the measured pass times serving and
+    # tier transfers, not XLA compiles
+    _tiered_session_flow(model, params, tiered=True, **flow)
+    _tiered_session_flow(model, params, tiered=False, **flow)
+
+    eng_t, resident, ttft_t, lat_t = _tiered_session_flow(
+        model, params, tiered=True, **flow
+    )
+    _, _, ttft_b, lat_b = _tiered_session_flow(
+        model, params, tiered=False, **flow
+    )
+    eng_t.pool.check()
+    by_tier = {}
+    for tier, t in ttft_t:
+        by_tier.setdefault(tier, []).append(t)
+    cold = [t for _, t in ttft_b]
+    host_p50 = _percentile(by_tier.get("host", []), 50)
+    pooled_p50 = _percentile(by_tier.get("pooled", []), 50)
+    cold_p50 = _percentile(cold, 50)
+    p = eng_t.pool
+    row = {
+        "config": {
+            "sessions": sessions,
+            "slots": slots,
+            "host_sessions": host,
+            "pooled_sessions": pooled,
+            "prompt_len": [prompt_lo, prompt_hi],
+            "turn1_new_tokens": [g1_lo, g1_hi],
+            "turn2_new_tokens": g2,
+        },
+        "resident_sessions": {
+            "tiered_peak": resident,
+            "baseline_capacity": slots,  # discard-on-evict keeps only HBM slots
+            "ratio": resident / slots if slots else 0.0,
+        },
+        "turn2_ttft": {
+            "wakeup_host_p50_s": host_p50,
+            "wakeup_pooled_p50_s": pooled_p50,
+            "cold_reprefill_p50_s": cold_p50,
+            "wakeups_by_tier": {k: len(v) for k, v in by_tier.items()},
+            "cold_vs_host_wakeup": cold_p50 / host_p50 if host_p50 else 0.0,
+        },
+        "decode_latency": {
+            "tiered_per_token_p50_s": _percentile(lat_t, 50),
+            "baseline_per_token_p50_s": _percentile(lat_b, 50),
+            "ratio": (
+                _percentile(lat_t, 50) / _percentile(lat_b, 50)
+                if _percentile(lat_b, 50)
+                else 0.0
+            ),
+        },
+        "tier_counters": {
+            "demotions": p.n_demote,
+            "promotions": p.n_promote,
+            "spills": p.n_spill,
+            "refills": p.n_refill,
+            "drops": p.n_drop,
+            "wakeups": eng_t.metrics.wakeups,
+            "cold_resumes": eng_t.metrics.cold_resumes,
+            "modeled_tier_s": p.modeled_tier_s,
+        },
+        "migration_extract": _migration_extract_bench(
+            model, params, slots=4 if args.tiny else 16, max_len=max(max_len, 32)
+        ),
+    }
+    mig = row["migration_extract"]
+    print(
+        f"tiered: {resident} resident sessions on {slots} slots "
+        f"(x{row['resident_sessions']['ratio']:.1f}); turn-2 TTFT p50 "
+        f"host {host_p50 * 1e3:.1f}ms / pooled {pooled_p50 * 1e3:.1f}ms vs "
+        f"cold re-prefill {cold_p50 * 1e3:.1f}ms; decode p50 ratio "
+        f"x{row['decode_latency']['ratio']:.2f}; migration extract "
+        f"{mig['slots']} slots: {mig['per_slot_s'] * 1e3:.1f}ms per-slot vs "
+        f"{mig['batched_s'] * 1e3:.1f}ms batched (x{mig['speedup']:.1f})"
+    )
+    return row
 
 
 def _fault_workload_stats(requests, out, rids, t0, wall_s, redone=0):
@@ -449,10 +637,19 @@ def main(argv=None) -> dict:
                          "orchestrated serving vs engine-restart baseline)")
     ap.add_argument("--fault-only", action="store_true",
                     help="run only the faulted scenarios (implies --fault)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="add the tiered KV-cache pooling section (two-turn "
+                         "session workload vs discard-on-evict baseline)")
+    ap.add_argument("--tiered-only", action="store_true",
+                    help="run only the tiered section (implies --tiered)")
+    ap.add_argument("--sessions", type=int, default=48,
+                    help="tiered section: number of two-turn sessions")
     ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "results"))
     args = ap.parse_args(argv)
     if args.fault_only:
         args.fault = True
+    if args.tiered_only:
+        args.tiered = True
 
     os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
     import jax
@@ -490,7 +687,7 @@ def main(argv=None) -> dict:
         }
     }
 
-    if not args.fault_only:
+    if not args.fault_only and not args.tiered_only:
         # ---- closed-loop: everything arrives at t=0
         cont = _run_continuous(model, params, prompts, budgets, args.slots, max_len, args.policy)
         base = _run_one_shot(model, params, prompts, budgets, args.slots, max_len)
@@ -523,6 +720,11 @@ def main(argv=None) -> dict:
             if base_o["tokens_per_s"]
             else 0.0,
         }
+
+    if args.tiered:
+        # ---- tiered KV-cache pooling: resident capacity, wakeup TTFT, and
+        # steady-state decode latency vs the discard-on-evict baseline
+        results["tiered"] = _run_tiered(model, params, args, cfg.vocab, rng)
 
     if args.fault:
         # ---- faulted open-loop: elastic orchestrated serving vs the
@@ -574,11 +776,12 @@ def main(argv=None) -> dict:
         )
     print(f"wrote {out_path}")
     # sync the repo-root copy only for full-scale complete runs: a --tiny or
-    # --fault-only smoke must never overwrite the committed default-scale
-    # artifact with partial rows
+    # single-section (--fault-only / --tiered-only) smoke must never
+    # overwrite the committed default-scale artifact with partial rows
     if (
         not args.tiny
         and not args.fault_only
+        and not args.tiered_only
         and os.path.abspath(args.out)
         == os.path.abspath(os.path.join(os.path.dirname(__file__), "results"))
     ):

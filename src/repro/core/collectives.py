@@ -212,6 +212,13 @@ class CollectiveCostModel:
     ici_latency: float = 1e-6  # per-message setup/hop overhead (CLEX's c_h)
     dcn_latency: float = 10e-6
     quant_bw: float = 100e9  # int8 quantise/dequantise throughput (bytes/s)
+    # KV-cache memory hierarchy (docs/SERVING.md, tiered pooling): each hop
+    # down the hierarchy is slower and farther, like the CLEX levels
+    hbm_host_bw: float = 16e9  # device <-> host staging (PCIe-class)
+    hbm_host_latency: float = 25e-6
+    host_pooled_bw: float = 4e9  # host <-> pooled/far memory (CXL-class)
+    host_pooled_latency: float = 150e-6
+    prefill_s_per_token: float = 2e-5  # modeled cost of re-prefilling a token
 
     def degraded(self, dcn_factor: float) -> "CollectiveCostModel":
         """The same machine with the scarce top-level links running at
@@ -297,6 +304,32 @@ class CollectiveCostModel:
         return base + 2.0 * shard / self.quant_bw
 
     # ---------------- serving-scheduler hooks (docs/SERVING.md) ----------------
+
+    _KV_TIERS = ("hbm", "host", "pooled")
+
+    def tier_transfer_cost(self, nbytes: float, src: str, dst: str) -> float:
+        """Seconds to move ``nbytes`` of KV cache between memory tiers.
+        Adjacent hops are hbm<->host (staging link) and host<->pooled (far
+        memory fabric); a hbm<->pooled move pays both hops — the same
+        store-and-forward accounting the CLEX levels use."""
+        order = self._KV_TIERS
+        if src not in order or dst not in order:
+            raise ValueError(f"unknown tier in {src!r} -> {dst!r}; tiers are {order}")
+        i, j = order.index(src), order.index(dst)
+        lo, hi = min(i, j), max(i, j)
+        hop_bw = (self.hbm_host_bw, self.host_pooled_bw)
+        hop_lat = (self.hbm_host_latency, self.host_pooled_latency)
+        return sum(nbytes / hop_bw[h] + hop_lat[h] for h in range(lo, hi))
+
+    def wakeup_cost(self, nbytes: float, tier: str = "host") -> float:
+        """Seconds to page a demoted session's cache row back into HBM."""
+        return self.tier_transfer_cost(nbytes, tier, "hbm")
+
+    def cold_prefill_cost(self, prompt_tokens: int) -> float:
+        """Modeled seconds to rebuild a cache by re-prefilling from scratch —
+        what waking a resident session avoids.  The ``cost_aware`` scheduler
+        compares this against :meth:`wakeup_cost` when ordering admission."""
+        return max(float(prompt_tokens), 0.0) * self.prefill_s_per_token
 
     def moe_dispatch_cost(
         self,

@@ -22,6 +22,16 @@ faults with --fault-schedule '<json>' (or @file.json), e.g.
 
   --orchestrate --fault-schedule \
       '[{"step": 20, "kind": "device_loss", "devices": 2}]'
+
+Tiered KV-cache pooling (docs/SERVING.md, memory hierarchy): --tiered gives
+every request a session identity; finished sessions demote their cache row
+into the HBM -> host -> pooled hierarchy instead of discarding it, and
+--turns N resumes each session N-1 more times — wakeups page the resident
+row back in and skip re-prefill.  --host-sessions/--pooled-sessions size
+the tier ledgers.
+
+  PYTHONPATH=src python -m repro.launch.serve --reduced --tiered --turns 3 \
+      --requests 24 --slots 4 --host-sessions 12 --pooled-sessions 12
 """
 
 from __future__ import annotations
@@ -64,6 +74,16 @@ def main() -> None:
                          "(events are keyed by engine step)")
     ap.add_argument("--open-rate", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = closed loop)")
+    ap.add_argument("--tiered", action="store_true",
+                    help="tiered KV-cache pooling: demote finished sessions "
+                         "into the HBM -> host -> pooled hierarchy")
+    ap.add_argument("--host-sessions", type=int, default=64,
+                    help="tiered: cache rows kept in host memory")
+    ap.add_argument("--pooled-sessions", type=int, default=256,
+                    help="tiered: rows spilled to the modeled pooled tier")
+    ap.add_argument("--turns", type=int, default=1,
+                    help="tiered: serve each session this many turns; turns "
+                         "after the first resume the demoted session")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -93,10 +113,20 @@ def main() -> None:
     if mesh is not None:
         params = reshard_params(model.param_axes(), params, mesh)
 
-    max_len = args.prompt_len + args.new_tokens + 8
+    tiers = None
+    resume_budget = max(args.new_tokens // 2, 1)
+    if args.tiered:
+        from ..runtime.serving import TierConfig
+
+        tiers = TierConfig(host_sessions=args.host_sessions,
+                           pooled_sessions=args.pooled_sessions)
+    # later turns append to each session's history, so capacity must hold
+    # the full multi-turn transcript
+    max_len = (args.prompt_len + args.new_tokens
+               + max(args.turns - 1, 0) * resume_budget + 8)
     engine = ContinuousBatchingEngine(
         model, params, n_slots=args.slots, max_len=max_len, policy=args.policy,
-        mesh=mesh,
+        mesh=mesh, tiers=tiers,
     )
     lens = rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1, args.requests)
     budgets = rng.integers(max(args.new_tokens // 4, 1), args.new_tokens + 1, args.requests)
@@ -106,14 +136,16 @@ def main() -> None:
 
     t0 = time.time()
     base = time.monotonic()
+    prompts = [rng.integers(1, cfg.vocab, (int(l),)).astype(np.int32) for l in lens]
     rids = [
         engine.submit(
-            rng.integers(1, cfg.vocab, (int(l),)).astype(np.int32),
+            p,
             int(b),
             temperature=args.temperature,
             arrival_time=None if arrivals is None else base + float(arrivals[i]),
+            session_id=i if args.tiered else None,
         )
-        for i, (l, b) in enumerate(zip(lens, budgets))
+        for i, (p, b) in enumerate(zip(prompts, budgets))
     ]
 
     if args.orchestrate:
@@ -135,6 +167,25 @@ def main() -> None:
         dt = time.time() - t0
 
     toks = sum(len(out[r]) for r in rids)
+
+    # multi-turn sessions: wake every demoted session for each extra turn —
+    # resident rows page back in and skip re-prefill; dropped ones
+    # re-prefill cold (either way the stream stays bit-exact)
+    if args.tiered and args.turns > 1:
+        histories = {i: np.concatenate([prompts[i], out[rids[i]]])
+                     for i in range(len(rids))}
+        for _ in range(args.turns - 1):
+            turn_rids = {
+                i: engine.submit(h, resume_budget,
+                                 temperature=args.temperature, session_id=i)
+                for i, h in histories.items()
+            }
+            turn_out = engine.run()
+            for i, r in turn_rids.items():
+                histories[i] = np.concatenate([histories[i], turn_out[r]])
+                toks += len(turn_out[r])
+        dt = time.time() - t0
+
     m = engine.metrics
     print(
         f"served {len(rids)} ragged requests / {toks} tokens in {dt:.2f}s "
@@ -145,6 +196,15 @@ def main() -> None:
         f"prefills={m.prefills} slot_utilization={m.slot_utilization:.2f} "
         f"pool_evictions={engine.pool.n_evict}"
     )
+    if args.tiered:
+        p = engine.pool
+        print(
+            f"tiers: resident_sessions={p.resident_sessions} "
+            f"(host={len(p.host)} pooled={len(p.pooled)} dropped={len(p.dropped)}) "
+            f"demotions={p.n_demote} wakeups={m.wakeups} "
+            f"cold_resumes={m.cold_resumes} spills={p.n_spill} "
+            f"refills={p.n_refill} modeled_tier_s={p.modeled_tier_s:.4f}"
+        )
     for r in rids[:4]:
         print("  ", out[r].tolist())
 

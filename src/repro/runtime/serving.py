@@ -8,6 +8,13 @@ production deployment needs (docs/SERVING.md):
 * ``KVPool`` — a pooled, slot-indexed KV cache: ``n_slots`` fixed-size cache
   rows allocated per request and evicted/reused on completion, instead of
   rebuilding the whole cache per batch.
+* ``TieredKVPool`` — the same pool behind an explicit memory hierarchy
+  (HBM slots -> host rows -> a modeled pooled/far tier): a finished
+  session's row is *demoted* to host instead of discarded, spilled to the
+  pooled tier LRU-first when host fills, and paged back on wakeup so a
+  resumed session skips re-prefill entirely.  Transfers are priced by
+  ``CollectiveCostModel.tier_transfer_cost`` — the memory hierarchy is
+  treated like another CLEX level (docs/SERVING.md, memory hierarchy).
 * ``Scheduler`` — decides which queued requests enter free decode slots.
   The ``cost_aware`` policy prices admission with
   ``core.collectives.CollectiveCostModel``: MoE-dispatch-heavy requests are
@@ -28,10 +35,12 @@ against.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import heapq
 import itertools
 import time
-from collections import deque
+from collections import OrderedDict
 from functools import partial
 from typing import Callable, Optional, Sequence
 
@@ -46,6 +55,9 @@ __all__ = [
     "Request",
     "RequestQueue",
     "KVPool",
+    "TierConfig",
+    "SessionRecord",
+    "TieredKVPool",
     "SchedulerConfig",
     "Scheduler",
     "ContinuousBatchingEngine",
@@ -79,6 +91,10 @@ class Request:
     # dispatch_weight: estimated MoE all-to-all bytes per decoded token
     # (0 for dense models); drives cost-aware co-scheduling
     dispatch_weight: float = 0.0
+    # session_id: multi-turn identity on a TieredKVPool engine — on finish
+    # the cache row is demoted (not discarded) and a later request with the
+    # same session_id wakes it up instead of re-prefilling
+    session_id: Optional[int] = None
 
     state: str = QUEUED
     tokens_out: list = dataclasses.field(default_factory=list)
@@ -88,6 +104,18 @@ class Request:
     t_admit: Optional[float] = None
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    # sampling identity: a resumed session keeps its original request id and
+    # token-index offset inside the sampling stream, so the continuation is
+    # bit-identical to a never-demoted run (set at admission from the
+    # session record; defaults mean "fresh stream")
+    sample_rid: Optional[int] = None
+    idx_base: int = 0
+    last_token: Optional[int] = None  # last sampled token (pending decode input)
+    # wakeup hint refreshed each admission round: which tier this request's
+    # session is resident in (None = must cold-prefill), and the row size
+    # the scheduler prices the wakeup transfer with
+    resume_tier: Optional[str] = None
+    resume_bytes: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -103,34 +131,73 @@ class Request:
 
 
 class RequestQueue:
-    """FIFO of queued requests; ``arrived(now)`` filters by arrival time."""
+    """FIFO of queued requests; ``arrived(now)`` filters by arrival time.
+
+    Closed-loop requests (``arrival_time=None``) go straight onto an
+    eligible list kept in submission order; open-loop requests wait in a
+    min-heap keyed by arrival time and graduate to the eligible list as the
+    clock passes them.  ``arrived(now)`` is O(eligible + arrivals·log
+    pending) and ``remove`` is amortised O(1) via lazy deletion — the
+    previous deque implementation rescanned and rebuilt the whole queue on
+    every engine step, O(queue²) over a long open-loop soak."""
+
+    _COMPACT_AT = 64  # lazy-deleted entries tolerated before a sweep
 
     def __init__(self):
-        self._q: deque[Request] = deque()
+        self._seq = itertools.count()  # submission order, total across both lists
+        self._ready: list[tuple[int, Request]] = []  # eligible, sorted by seq
+        self._pending: list[tuple[float, int, Request]] = []  # heap by arrival
+        self._gone: set[int] = set()  # id()s removed but not yet swept
 
     def push(self, req: Request) -> None:
-        self._q.append(req)
+        seq = next(self._seq)
+        if req.arrival_time is None:
+            self._ready.append((seq, req))  # seq is increasing: stays sorted
+        else:
+            heapq.heappush(self._pending, (req.arrival_time, seq, req))
 
     def __len__(self) -> int:
-        return len(self._q)
+        return len(self._ready) + len(self._pending) - len(self._gone)
 
     def __iter__(self):
-        return iter(self._q)
+        live = [(s, r) for s, r in self._ready if id(r) not in self._gone]
+        live += [(s, r) for _, s, r in self._pending if id(r) not in self._gone]
+        return iter(r for _, r in sorted(live, key=lambda e: e[0]))
+
+    def _graduate(self, now: float) -> None:
+        while self._pending and self._pending[0][0] <= now:
+            _, seq, req = heapq.heappop(self._pending)
+            if id(req) in self._gone:
+                self._gone.discard(id(req))
+                continue
+            bisect.insort(self._ready, (seq, req))
+
+    def _compact(self) -> None:
+        if len(self._gone) < self._COMPACT_AT:
+            return
+        self._ready = [(s, r) for s, r in self._ready if id(r) not in self._gone]
+        still = {id(r) for _, r in self._ready}
+        still |= {id(r) for _, _, r in self._pending}
+        self._gone &= still  # entries left only in the heap stay lazily dead
 
     def arrived(self, now: Optional[float]) -> list[Request]:
         """Requests eligible for admission at virtual/wall time ``now``
         (``now=None`` treats every queued request as arrived)."""
         if now is None:
-            return list(self._q)
-        return [r for r in self._q if r.arrival_time is None or r.arrival_time <= now]
+            return list(self)
+        self._graduate(now)
+        self._compact()
+        return [r for _, r in self._ready if id(r) not in self._gone]
 
     def remove(self, reqs: Sequence[Request]) -> None:
-        picked = {id(r) for r in reqs}
-        self._q = deque(r for r in self._q if id(r) not in picked)
+        self._gone.update(id(r) for r in reqs)
 
     def next_arrival(self) -> Optional[float]:
-        times = [r.arrival_time for r in self._q if r.arrival_time is not None]
-        return min(times) if times else None
+        """Earliest not-yet-graduated arrival time (the engine only consults
+        this when idle, i.e. after ``arrived`` drained everything due)."""
+        while self._pending and id(self._pending[0][2]) in self._gone:
+            self._gone.discard(id(heapq.heappop(self._pending)[2]))
+        return self._pending[0][0] if self._pending else None
 
 
 # --------------------------------------------------------------------------
@@ -164,9 +231,12 @@ class KVPool:
     cache row is recycled immediately.
     """
 
+    tiered = False  # TieredKVPool overrides; engines branch on this
+
     def __init__(self, model: Model, n_slots: int, capacity: int):
         if n_slots < 1:
             raise ValueError("KVPool needs at least one slot")
+        self.model = model
         self.n_slots = n_slots
         self.capacity = capacity
         self.caches = model.init_cache(n_slots, capacity)
@@ -194,6 +264,16 @@ class KVPool:
     @property
     def n_used(self) -> int:
         return self.n_slots - len(self._free)
+
+    # uniform residency accounting with TieredKVPool: a plain pool only
+    # holds sessions while they occupy an HBM slot
+    @property
+    def resident_sessions(self) -> int:
+        return self.n_used
+
+    @property
+    def demoted_sessions(self) -> int:
+        return 0
 
     def active_slots(self) -> list[int]:
         return [s for s, r in enumerate(self.slot_rid) if r is not None]
@@ -242,6 +322,63 @@ class KVPool:
             raise ValueError(f"slot {slot} is not allocated — allocate before insert")
         self.write(slot, row)
 
+    def extract_all(self, slots: Sequence[int]) -> list:
+        """Extract many slots with a single device->host sync: one gather of
+        every requested row, one ``device_get`` of the gathered tree, then
+        host-side slicing into per-slot rows.  Bit-identical to calling
+        :meth:`extract` per slot, but a k-slot migration pays one sync
+        instead of k — the dominant term in the migration pause."""
+        for s in slots:
+            if self.slot_rid[s] is None:
+                raise ValueError(f"slot {s} is not allocated")
+        if not slots:
+            return []
+        ax = 1 if self.stacked else 0
+        idx = jnp.asarray(list(slots), jnp.int32)
+        gathered = jax.device_get(
+            jax.tree.map(lambda c: jnp.take(c, idx, axis=ax), self.caches)
+        )
+        return [
+            jax.tree.map(lambda c: np.take(c, [i], axis=ax), gathered)
+            for i in range(len(slots))
+        ]
+
+    def insert_all(self, slots: Sequence[int], rows: Sequence) -> None:
+        """Install many extracted rows with one host->device dispatch: the
+        rows are concatenated host-side and scattered into their slots by a
+        single jitted update — the inverse of :meth:`extract_all`."""
+        if len(slots) != len(rows):
+            raise ValueError(f"{len(slots)} slots but {len(rows)} rows")
+        if not slots:
+            return
+        for s in slots:
+            if self.slot_rid[s] is None:
+                raise ValueError(f"slot {s} is not allocated — allocate before insert")
+        ax = 1 if self.stacked else 0
+        packed = jax.tree.map(lambda *ls: np.concatenate(ls, axis=ax), *rows)
+        key = ("kvpool_write_many", self.model, self.n_slots, self.capacity,
+               self.stacked, len(slots))
+        write_many = _JIT_CACHE.get(key)
+        if write_many is None:
+            k, stacked = len(slots), self.stacked
+
+            @partial(jax.jit, donate_argnums=0)
+            def write_many(pool_caches, packed_rows, slot_idx):
+                for i in range(k):
+                    row = jax.tree.map(
+                        lambda c: jax.lax.dynamic_slice_in_dim(c, i, 1, axis=ax),
+                        packed_rows,
+                    )
+                    pool_caches = merge_slot_caches(
+                        pool_caches, row, slot_idx[i], stacked
+                    )
+                return pool_caches
+
+            _JIT_CACHE[key] = write_many
+        self.caches = write_many(
+            self.caches, packed, jnp.asarray(list(slots), jnp.int32)
+        )
+
     def check(self) -> None:
         """Slot-accounting invariants (the chaos harness calls this after
         every migration): the free list and the allocated slots partition the
@@ -258,6 +395,220 @@ class KVPool:
         rids = [r for r in self.slot_rid if r is not None]
         if len(rids) != len(set(rids)):
             raise AssertionError(f"request id owns two slots: {self.slot_rid}")
+
+
+# --------------------------------------------------------------------------
+# tiered memory hierarchy: HBM slots -> host rows -> modeled pooled tier
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TierConfig:
+    """Capacities of the demoted-session tiers (docs/SERVING.md).
+
+    host_sessions    cache rows kept in host memory (real numpy trees —
+                     wakeup pays one host->HBM insert)
+    pooled_sessions  rows spilled onward to the modeled pooled/far tier
+                     (rows stay host-resident in this process; the extra
+                     pooled<->host hop is *priced*, not performed)
+    """
+
+    host_sessions: int = 64
+    pooled_sessions: int = 256
+
+    def __post_init__(self):
+        if self.host_sessions < 0 or self.pooled_sessions < 0:
+            raise ValueError("tier capacities must be >= 0")
+
+
+@dataclasses.dataclass
+class SessionRecord:
+    """A demoted session: everything needed to resume decode bit-exact.
+
+    ``row`` is the :meth:`KVPool.extract` wire format (device-independent
+    host tree); ``pos``/``last_token`` restore the ring position and the
+    pending decode input; ``sample_rid``/``idx_base`` pin the sampling
+    stream so the continuation is identical to a never-demoted run —
+    including a cold re-prefill resume after the row was dropped."""
+
+    sid: int
+    pos: int
+    last_token: int
+    sample_rid: int
+    idx_base: int
+    tier: str = "host"  # "host" | "pooled" | "dropped"
+    row: object = None  # None once dropped (metadata-only)
+    nbytes: int = 0
+
+
+class TieredKVPool(KVPool):
+    """A :class:`KVPool` whose evictions feed a memory hierarchy instead of
+    the void: HBM slots (active decode) -> host rows (demoted sessions,
+    LRU) -> a modeled pooled/far tier -> metadata-only (dropped).
+
+    * :meth:`demote` extracts a finishing slot's row through the migration
+      wire format and parks it in the host ledger; host overflow spills the
+      least-recently-demoted row to the pooled tier, pooled overflow drops
+      the row and keeps only the sampling metadata (a later wakeup then
+      re-prefills cold, still bit-exact).
+    * :meth:`promote` pages a resident row back into a free HBM slot
+      (pooled rows pay the extra modeled pooled->host hop first).
+    * every transfer is priced by ``CollectiveCostModel.tier_transfer_cost``
+      and accumulated in ``modeled_tier_s`` — the hierarchy is a CLEX level
+      structure and its hops are billed like any other collective.
+
+    Ledgers hold plain host data, so they survive a mesh collapse untouched:
+    ``ContinuousBatchingEngine.migrate`` carries them to the rebuilt pool
+    via :meth:`adopt`.
+    """
+
+    tiered = True
+
+    def __init__(
+        self,
+        model: Model,
+        n_slots: int,
+        capacity: int,
+        tiers: TierConfig = TierConfig(),
+        cost_model: Optional[CollectiveCostModel] = None,
+    ):
+        super().__init__(model, n_slots, capacity)
+        self.tiers = tiers
+        self.cost_model = cost_model or CollectiveCostModel()
+        self.host: OrderedDict[int, SessionRecord] = OrderedDict()
+        self.pooled: OrderedDict[int, SessionRecord] = OrderedDict()
+        self.dropped: dict[int, SessionRecord] = {}
+        self.n_demote = 0
+        self.n_promote = 0
+        self.n_spill = 0
+        self.n_refill = 0
+        self.n_drop = 0
+        self.modeled_tier_s = 0.0
+
+    # ---------------- residency accounting ----------------
+
+    @property
+    def resident_sessions(self) -> int:
+        """Sessions whose cache row is held *somewhere* in the hierarchy
+        (active slot, host, or pooled) — the capacity headline the tiered
+        bench reports per device."""
+        return self.n_used + len(self.host) + len(self.pooled)
+
+    @property
+    def demoted_sessions(self) -> int:
+        return len(self.host) + len(self.pooled)
+
+    def _account(self, nbytes: int, src: str, dst: str) -> None:
+        self.modeled_tier_s += self.cost_model.tier_transfer_cost(nbytes, src, dst)
+
+    def session_tier(self, sid: int) -> Optional[str]:
+        rec = self.lookup(sid)
+        return rec.tier if rec is not None else None
+
+    def lookup(self, sid: int) -> Optional[SessionRecord]:
+        return self.host.get(sid) or self.pooled.get(sid) or self.dropped.get(sid)
+
+    # ---------------- demotion / promotion ----------------
+
+    def demote(self, slot: int, rec: SessionRecord) -> SessionRecord:
+        """Evict ``slot`` into the hierarchy: extract the row to host (wire
+        format), free the slot, and spill LRU-first past the tier caps."""
+        rec.row = self.extract(slot)
+        rec.nbytes = int(
+            sum(np.asarray(leaf).nbytes for leaf in jax.tree.leaves(rec.row))
+        )
+        self.free(slot)
+        # a re-demoted session id supersedes any stale ledger entry
+        self.host.pop(rec.sid, None)
+        self.pooled.pop(rec.sid, None)
+        self.dropped.pop(rec.sid, None)
+        rec.tier = "host"
+        self.host[rec.sid] = rec
+        self.n_demote += 1
+        self._account(rec.nbytes, "hbm", "host")
+        while len(self.host) > self.tiers.host_sessions:
+            sid, cold = self.host.popitem(last=False)  # least recently demoted
+            cold.tier = "pooled"
+            self.pooled[sid] = cold
+            self.n_spill += 1
+            self._account(cold.nbytes, "host", "pooled")
+        while len(self.pooled) > self.tiers.pooled_sessions:
+            sid, cold = self.pooled.popitem(last=False)
+            cold.tier = "dropped"
+            cold.row = None
+            self.dropped[sid] = cold
+            self.n_drop += 1
+        return rec
+
+    def promote(self, sid: int, rid: int) -> tuple[int, SessionRecord]:
+        """Page session ``sid`` back into a freshly allocated HBM slot for
+        request ``rid``; returns (slot, record).  Caller guarantees a free
+        slot (admission is gated on ``n_free``)."""
+        rec = self.host.pop(sid, None)
+        if rec is None:
+            rec = self.pooled.pop(sid, None)
+            if rec is None:
+                raise KeyError(f"session {sid} has no resident row to promote")
+            self.n_refill += 1
+            self._account(rec.nbytes, "pooled", "host")
+        slot = self.allocate(rid)
+        if slot is None:
+            raise RuntimeError("promote called with no free slot")
+        self.insert(slot, rec.row)
+        self._account(rec.nbytes, "host", "hbm")
+        self.n_promote += 1
+        rec.row = None
+        rec.tier = "hbm"
+        return slot, rec
+
+    def claim_dropped(self, sid: int) -> Optional[SessionRecord]:
+        """Take the metadata-only record of a dropped session (cold resume:
+        the caller re-prefills but keeps the sampling identity)."""
+        return self.dropped.pop(sid, None)
+
+    def adopt(self, old: "TieredKVPool") -> None:
+        """Carry the demoted ledgers (and their counters) over from the pool
+        being replaced — host rows are device-independent, so a mesh
+        collapse must not touch them (``ContinuousBatchingEngine.migrate``)."""
+        self.host = old.host
+        self.pooled = old.pooled
+        self.dropped = old.dropped
+        self.n_demote = old.n_demote
+        self.n_promote = old.n_promote
+        self.n_spill = old.n_spill
+        self.n_refill = old.n_refill
+        self.n_drop = old.n_drop
+        self.modeled_tier_s = old.modeled_tier_s
+
+    def check(self) -> None:
+        """Slot invariants plus tier-ledger invariants: a session lives in
+        exactly one ledger, resident tiers hold real rows (dropped holds
+        none), and no ledger exceeds its configured capacity."""
+        super().check()
+        sids = list(self.host) + list(self.pooled) + list(self.dropped)
+        if len(sids) != len(set(sids)):
+            raise AssertionError(f"session in two tiers: {sorted(sids)}")
+        for name, ledger in (("host", self.host), ("pooled", self.pooled)):
+            for sid, rec in ledger.items():
+                if rec.row is None:
+                    raise AssertionError(f"{name} session {sid} lost its row")
+                if rec.tier != name:
+                    raise AssertionError(
+                        f"session {sid} in {name} ledger but tagged {rec.tier!r}"
+                    )
+        for sid, rec in self.dropped.items():
+            if rec.row is not None:
+                raise AssertionError(f"dropped session {sid} still holds a row")
+        if len(self.host) > self.tiers.host_sessions:
+            raise AssertionError(
+                f"host ledger over capacity: {len(self.host)} > "
+                f"{self.tiers.host_sessions}"
+            )
+        if len(self.pooled) > self.tiers.pooled_sessions:
+            raise AssertionError(
+                f"pooled ledger over capacity: {len(self.pooled)} > "
+                f"{self.tiers.pooled_sessions}"
+            )
 
 
 # --------------------------------------------------------------------------
@@ -334,6 +685,14 @@ class Scheduler:
             self.cfg.bytes_per_elem,
         )
 
+    def admission_cost(self, r: Request) -> float:
+        """Seconds to get ``r`` decoding: waking a tier-resident session pays
+        the (priced) row transfer; anything else pays a modeled cold
+        prefill.  Used to order admission when sessions can be woken."""
+        if r.resume_tier is not None:
+            return self.cost_model.wakeup_cost(r.resume_bytes, r.resume_tier)
+        return self.cost_model.cold_prefill_cost(r.prompt_len)
+
     def select(
         self,
         candidates: Sequence[Request],
@@ -352,6 +711,13 @@ class Scheduler:
 
         heavy = [r for r in candidates if r.moe_heavy]
         light = [r for r in candidates if not r.moe_heavy]
+        # tiered pooling: when any candidate can be *woken* (its session is
+        # tier-resident), order each class by admission cost so a cheap
+        # host-wakeup beats an expensive cold prefill for the scarce free
+        # slots.  Stable sort: pure-cold rounds keep exact arrival order.
+        if any(r.resume_tier is not None for r in candidates):
+            heavy = sorted(heavy, key=self.admission_cost)
+            light = sorted(light, key=self.admission_cost)
         picks: list[Request] = []
 
         aged = any(r.deferred >= self.cfg.max_defer_steps for r in heavy)
@@ -413,6 +779,10 @@ class EngineMetrics:
     active_slot_steps: int = 0
     total_slot_steps: int = 0
     predicted_a2a_s: float = 0.0
+    # tiered pooling (TieredKVPool engines only)
+    demotions: int = 0  # finished sessions parked in the hierarchy
+    wakeups: int = 0  # resumes served from a resident row (prefill skipped)
+    cold_resumes: int = 0  # resumes whose row was dropped (re-prefilled)
 
     @property
     def slot_utilization(self) -> float:
@@ -447,6 +817,7 @@ class ContinuousBatchingEngine:
         pad_id: int = 0,
         min_prompt_bucket: int = 8,
         audit: bool = False,
+        tiers: Optional[TierConfig] = None,
     ):
         if model.cfg.enc_dec:
             raise NotImplementedError("continuous batching supports decoder-only models")
@@ -456,10 +827,15 @@ class ContinuousBatchingEngine:
         self.pad_id = pad_id
         self.seed = seed
         self.queue = RequestQueue()
-        self.pool = KVPool(model, n_slots, max_len)
+        # tiers=TierConfig(...) turns on the memory hierarchy: finished
+        # sessions demote to host/pooled and wake up via submit(session_id=)
+        self.tiers = tiers
+        self._cost_model = cost_model or CollectiveCostModel()
+        self.pool = self._make_pool(n_slots, max_len)
         self.metrics = EngineMetrics()
         self._rid = itertools.count()
         self.requests: dict[int, Request] = {}
+        self._busy_sessions: set[int] = set()  # one in-flight request per session
 
         cfg = model.cfg
         self._n_moe_layers = sum(cfg.layer_is_moe(i) for i in range(cfg.n_layers))
@@ -471,7 +847,7 @@ class ContinuousBatchingEngine:
         if scheduler is None:
             scheduler = Scheduler(
                 SchedulerConfig(policy=policy),
-                cost_model or CollectiveCostModel(),
+                self._cost_model,
                 d_model=cfg.d_model,
                 top_k=cfg.moe.top_k if cfg.moe else 0,
                 n_moe_layers=self._n_moe_layers,
@@ -494,6 +870,14 @@ class ContinuousBatchingEngine:
 
         self._reset_slot_state(n_slots)
         self._build_jits()
+
+    def _make_pool(self, n_slots: int, capacity: int) -> KVPool:
+        if self.tiers is not None:
+            return TieredKVPool(
+                self.model, n_slots, capacity, self.tiers,
+                cost_model=self._cost_model,
+            )
+        return KVPool(self.model, n_slots, capacity)
 
     def _reset_slot_state(self, n_slots: int) -> None:
         S = n_slots
@@ -543,9 +927,13 @@ class ContinuousBatchingEngine:
         row_axis = 1 if stacked else 0
 
         @partial(jax.jit, donate_argnums=(3,))
-        def prefill_into(params, tokens, true_len, pool_caches, slots, temps, rids):
+        def prefill_into(params, tokens, true_len, pool_caches, slots, temps, rids,
+                         idx0):
             """Batched admission: prefill G requests together ([G, bucket])
-            and write each prepared cache row into its pool slot."""
+            and write each prepared cache row into its pool slot.  ``idx0``
+            is each row's sampling-stream offset — 0 for fresh requests,
+            the session's token count so far for a cold (dropped-session)
+            resume, so the re-prefilled continuation stays bit-exact."""
             g = tokens.shape[0]
             logits, caches = m.prefill(
                 params, {"tokens": tokens}, mesh=mesh_, last_pos=true_len - 1
@@ -557,9 +945,7 @@ class ContinuousBatchingEngine:
                     lambda c: jax.lax.dynamic_slice_in_dim(c, i, 1, axis=row_axis), caches
                 )
                 pool_caches = merge_slot_caches(pool_caches, row, slots[i], stacked)
-            toks = jax.vmap(sample_one)(
-                logits[:, 0], temps, rids, jnp.zeros((g,), jnp.int32)
-            )
+            toks = jax.vmap(sample_one)(logits[:, 0], temps, rids, idx0)
             return toks, pool_caches
 
         @partial(jax.jit, donate_argnums=(1,))
@@ -607,7 +993,9 @@ class ContinuousBatchingEngine:
                 f"cannot migrate {len(active)} in-flight requests into "
                 f"{new_slots} slots — the survivor pool must hold every live row"
             )
-        rows = [(r, self.pool.extract(s)) for s, r in active]
+        # one gather + one device->host sync for all live rows (extract_all),
+        # not one sync per slot — the dominant term in the migration pause
+        rows = self.pool.extract_all([s for s, _ in active])
         old = self.pool
         for s, _ in active:  # lifetime ledger: every allocate gets its free
             old.free(s)
@@ -615,20 +1003,28 @@ class ContinuousBatchingEngine:
             self.params = params
         if mesh is not None:
             self.mesh = mesh
-        self.pool = KVPool(self.model, new_slots, old.capacity)
+        self.pool = self._make_pool(new_slots, old.capacity)
         self.pool.n_alloc += old.n_alloc
         self.pool.n_evict += old.n_evict
         self.pool.high_water = old.high_water
+        if self.pool.tiered and old.tiered:
+            # demoted rows are host-side and device-independent: the ledger
+            # outlives the mesh, it just moves to the rebuilt pool
+            self.pool.adopt(old)
         self._reset_slot_state(new_slots)
-        for req, row in rows:
+        new_slot_order = []
+        for (_, req), row in zip(active, rows):
             slot = self.pool.allocate(req.rid)
-            self.pool.insert(slot, row)
             req.slot = slot
             self._slot_req[slot] = req
-            self._tokens[slot] = req.tokens_out[-1]
+            self._tokens[slot] = (
+                req.tokens_out[-1] if req.tokens_out else req.last_token
+            )
             self._pos[slot] = req.prompt_len + len(req.tokens_out) - 1
             self._temps[slot] = req.temperature
-            self._rids[slot] = req.rid
+            self._rids[slot] = req.sample_rid if req.sample_rid is not None else req.rid
+            new_slot_order.append(slot)
+        self.pool.insert_all(new_slot_order, rows)
         self._build_jits()
         return len(rows)
 
@@ -643,8 +1039,19 @@ class ContinuousBatchingEngine:
         arrival_time: Optional[float] = None,
         dispatch_weight: Optional[float] = None,
         now: Optional[float] = None,
+        session_id: Optional[int] = None,
     ) -> int:
-        """Enqueue one request; returns its request id."""
+        """Enqueue one request; returns its request id.
+
+        ``session_id`` (tiered engines): a stable caller-chosen identity.
+        The first request under a session id creates the session; when it
+        finishes, its cache row demotes into the memory hierarchy instead of
+        being discarded.  A later request with the same id *resumes* it —
+        ``prompt`` must then be the session's full token history (original
+        prompt + every generated token), and admission pages the resident
+        row back in and skips re-prefill (or re-prefills the history if the
+        row was dropped — either way the continuation is bit-exact).  One
+        request may be in flight per session at a time."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -655,6 +1062,18 @@ class ContinuousBatchingEngine:
                 f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds pool capacity {self.pool.capacity}"
             )
+        if session_id is not None and self.pool.tiered:
+            if session_id in self._busy_sessions:
+                raise ValueError(
+                    f"session {session_id} already has a request in flight"
+                )
+            rec = self.pool.lookup(session_id)
+            if rec is not None and prompt.size != rec.pos + 1:
+                raise ValueError(
+                    f"resume of session {session_id} must carry its full "
+                    f"token history ({rec.pos + 1} tokens), got {prompt.size}"
+                )
+            self._busy_sessions.add(session_id)
         req = Request(
             rid=next(self._rid),
             prompt=prompt,
@@ -665,6 +1084,7 @@ class ContinuousBatchingEngine:
             dispatch_weight=(
                 self._dispatch_weight if dispatch_weight is None else dispatch_weight
             ),
+            session_id=session_id,
             t_submit=now if now is not None else time.monotonic(),
         )
         self.requests[req.rid] = req
@@ -679,24 +1099,34 @@ class ContinuousBatchingEngine:
         return min(max(_next_pow2(length), self.min_prompt_bucket), self.pool.capacity)
 
     def _admission_groups(self, picks: list[Request]) -> list[list[Request]]:
-        """Split admitted requests into batched-prefill groups.  Group sizes
-        are powers of two and prompts pad to the group's max bucket, so the
-        number of distinct compiled prefill shapes stays O(buckets * log
-        slots).  Non-bucketing (SSM-bearing) models prefill one by one at
-        exact length."""
+        """Split admitted requests into batched-prefill groups.  Picks are
+        grouped by prompt bucket *first* (stable, so arrival order holds
+        within a bucket), then each bucket run splits into power-of-two
+        group sizes — a group never pads beyond its own bucket, so one long
+        prompt can no longer drag a whole group up to its pad width.
+        Compiled prefill shapes stay O(buckets * log slots).  Non-bucketing
+        (SSM-bearing) models prefill one by one at exact length."""
         if not self._bucket_prompts:
             return [[r] for r in picks]
-        groups, i = [], 0
-        while i < len(picks):
-            g = 1 << ((len(picks) - i).bit_length() - 1)  # largest pow2 <= rest
-            groups.append(picks[i : i + g])
-            i += g
+        by_bucket: dict[int, list[Request]] = {}
+        for r in picks:
+            by_bucket.setdefault(self._bucket(r.prompt_len), []).append(r)
+        groups = []
+        for bucket in sorted(by_bucket):
+            run, i = by_bucket[bucket], 0
+            while i < len(run):
+                g = 1 << ((len(run) - i).bit_length() - 1)  # largest pow2 <= rest
+                groups.append(run[i : i + g])
+                i += g
         return groups
 
     def _admit_group(self, group: list[Request], now: float) -> None:
         g = len(group)
         slots = [self.pool.allocate(r.rid) for r in group]
         assert all(s is not None for s in slots)
+        for r in group:
+            if r.sample_rid is None:
+                r.sample_rid = r.rid
         bucket = max(self._bucket(r.prompt_len) for r in group)
         toks = np.full((g, bucket), self.pad_id, np.int32)
         for i, r in enumerate(group):
@@ -708,7 +1138,8 @@ class ContinuousBatchingEngine:
             self.pool.caches,
             jnp.asarray(slots, jnp.int32),
             jnp.asarray([r.temperature for r in group], jnp.float32),
-            jnp.asarray([r.rid for r in group], jnp.int32),
+            jnp.asarray([r.sample_rid for r in group], jnp.int32),
+            jnp.asarray([r.idx_base for r in group], jnp.int32),
         )
         self.metrics.prefills += 1
         firsts = np.asarray(firsts)
@@ -719,22 +1150,60 @@ class ContinuousBatchingEngine:
             req.t_admit = now
             req.t_first = now
             req.tokens_out.append(tok)
+            req.last_token = tok
             if self.audit_enabled:
                 self.audit.append((req.rid, 0))
             self._slot_req[slot] = req
             self._tokens[slot] = tok
             self._pos[slot] = req.prompt_len
             self._temps[slot] = req.temperature
-            self._rids[slot] = req.rid
+            self._rids[slot] = req.sample_rid
             self._maybe_finish(req, tok, now)
+
+    def _admit_resume(self, req: Request, now: float) -> None:
+        """Wake a tier-resident session: page its row into a free slot and
+        resume decode where it left off — no prefill at all.  The first new
+        token comes from the next decode step (t_first is stamped then)."""
+        slot, rec = self.pool.promote(req.session_id, req.rid)
+        req.state = RUNNING
+        req.slot = slot
+        req.t_admit = now
+        req.sample_rid = rec.sample_rid
+        req.idx_base = rec.idx_base
+        req.last_token = rec.last_token
+        self._slot_req[slot] = req
+        self._tokens[slot] = rec.last_token
+        self._pos[slot] = rec.pos
+        self._temps[slot] = req.temperature
+        self._rids[slot] = rec.sample_rid
+        self.metrics.wakeups += 1
 
     def _maybe_finish(self, req: Request, last_tok: int, now: float) -> None:
         hit_eos = req.eos_id is not None and last_tok == req.eos_id
         if hit_eos or len(req.tokens_out) >= req.max_new_tokens:
             req.state = FINISHED
             req.t_done = now
-            self.pool.free(req.slot)
-            self._slot_req[req.slot] = None
+            slot = req.slot
+            if req.session_id is not None and self.pool.tiered:
+                # park the session in the hierarchy instead of discarding:
+                # a wakeup resumes from here without re-prefilling
+                self.pool.demote(
+                    slot,
+                    SessionRecord(
+                        sid=req.session_id,
+                        pos=int(self._pos[slot]),
+                        last_token=int(self._tokens[slot]),
+                        sample_rid=req.sample_rid,
+                        idx_base=req.idx_base + len(req.tokens_out),
+                    ),
+                )
+                self.metrics.demotions += 1
+                self._busy_sessions.discard(req.session_id)
+            else:
+                self.pool.free(slot)
+                if req.session_id is not None:
+                    self._busy_sessions.discard(req.session_id)
+            self._slot_req[slot] = None
             req.slot = None
 
     def step(self, now: Optional[float] = None) -> int:
@@ -745,14 +1214,43 @@ class ContinuousBatchingEngine:
         produced = 0
 
         # ---- admission: fill freed slots from the queue
-        candidates = [] if self._paused else self.queue.arrived(now)
-        if candidates and self.pool.n_free:
+        candidates = (
+            [] if self._paused or not self.pool.n_free else self.queue.arrived(now)
+        )
+        if candidates:
+            if self.pool.tiered:
+                # refresh each session request's wakeup hint — residency can
+                # change between rounds as other demotions spill the ledger
+                for r in candidates:
+                    if r.session_id is not None:
+                        rec = self.pool.lookup(r.session_id)
+                        resident = rec is not None and rec.row is not None
+                        r.resume_tier = rec.tier if resident else None
+                        r.resume_bytes = rec.nbytes if resident else 0
             n_heavy_active = sum(
                 1 for r in self._slot_req if r is not None and r.moe_heavy
             )
             picks = self.scheduler.select(candidates, self.pool.n_free, n_heavy_active)
             self.queue.remove(picks)
-            for group in self._admission_groups(picks):
+            cold: list[Request] = []
+            for r in picks:
+                if (
+                    self.pool.tiered
+                    and r.session_id is not None
+                    and self.pool.session_tier(r.session_id) in ("host", "pooled")
+                ):
+                    self._admit_resume(r, now)  # wakeup: no prefill
+                    continue
+                if self.pool.tiered and r.session_id is not None:
+                    rec = self.pool.claim_dropped(r.session_id)
+                    if rec is not None:
+                        # row was dropped: re-prefill the full history but
+                        # keep the sampling identity — still bit-exact
+                        r.sample_rid = rec.sample_rid
+                        r.idx_base = rec.idx_base
+                        self.metrics.cold_resumes += 1
+                cold.append(r)
+            for group in self._admission_groups(cold):
                 self._admit_group(group, now)
                 produced += len(group)
             self.metrics.predicted_a2a_s += self.scheduler.last_step_cost
@@ -761,7 +1259,10 @@ class ContinuousBatchingEngine:
         active = [r for r in self._slot_req if r is not None]
         if active:
             idxs = np.array(
-                [len(r.tokens_out) if r is not None else 0 for r in self._slot_req],
+                [
+                    r.idx_base + len(r.tokens_out) if r is not None else 0
+                    for r in self._slot_req
+                ],
                 np.int32,
             )
             toks, self.pool.caches = self._decode(
@@ -783,6 +1284,9 @@ class ContinuousBatchingEngine:
                 if self.audit_enabled:
                     self.audit.append((req.rid, len(req.tokens_out)))
                 req.tokens_out.append(tok)
+                req.last_token = tok
+                if req.t_first is None:
+                    req.t_first = now  # woken sessions skip prefill
                 self._tokens[slot] = tok
                 self._pos[slot] += 1
                 self.metrics.active_slot_steps += 1

@@ -12,9 +12,15 @@ orchestrator understands:
   data axis), ``device_put`` the params onto the new mesh
   (:func:`~repro.runtime.sharding.reshard_params`) and **migrate the live
   KV pool**: admission is paused, every active slot's ring cache is
-  extracted to host, re-inserted into the rebuilt pool, and in-flight
-  decode resumes from the last completed step — bit-exact, no token redone
-  or lost (the engine's audit trail stays gap-free).
+  extracted to host in one batched gather (``KVPool.extract_all`` — a
+  single device→host sync for all live rows), re-inserted into the rebuilt
+  pool in one dispatch, and in-flight decode resumes from the last
+  completed step — bit-exact, no token redone or lost (the engine's audit
+  trail stays gap-free).  On a tiered pool
+  (:class:`~repro.runtime.serving.TieredKVPool`) the demoted-session
+  ledger is host-side and device-independent: it is carried to the rebuilt
+  pool untouched, so sessions parked before the collapse still wake up
+  afterwards without re-prefill.
 * **straggler** → after ``straggler_patience`` slowed steps, *drain* the
   slow host: migrate its slots away through the same path and remesh
   without it, cutting the remaining injected slowdown short (the p99
@@ -194,6 +200,9 @@ class ServingOrchestrator:
             "survivors": survivors, "devices_used": usable,
             "mesh": self._mesh_shape(), "n_slots": n_slots,
             "migrated_slots": migrated, "migrate_s": dt,
+            # tiered pooling: demoted sessions are host-side and ride along
+            # untouched (the ledger is carried, not re-extracted)
+            "demoted_sessions": eng.pool.demoted_sessions,
         }
         report.migrations.append(rec)
         report.mesh_history.append((step, self._mesh_shape()))

@@ -137,6 +137,40 @@ def test_serving_bench_tiny_fault_smoke(tmp_path):
             assert row["orchestrated"]["slow_s_avoided"] > 0
 
 
+def test_serving_bench_tiny_tiered_smoke(tmp_path):
+    """serving_bench --tiny --tiered-only drives the two-turn session
+    workload through the tiered KV hierarchy and the discard-on-evict
+    baseline and writes the tiered row (docs/SERVING.md, memory hierarchy).
+    Structure-only at tiny scale: the >=10x resident-capacity and TTFT
+    margins are a default-scale claim (the committed BENCH_serving.json)."""
+    from benchmarks.serving_bench import main
+
+    results = main(["--tiny", "--tiered-only", "--sessions", "4",
+                    "--slots", "2", "--out", str(tmp_path)])
+    on_disk = json.loads((tmp_path / "BENCH_serving.json").read_text())
+    assert set(on_disk) == set(results)
+    assert "closed_ragged" not in on_disk  # --tiered-only skips the base rows
+    row = on_disk["tiered"]
+    res = row["resident_sessions"]
+    # every finished session stays resident in the hierarchy; the baseline
+    # retains only its HBM slots
+    assert res["tiered_peak"] == 4 and res["baseline_capacity"] == 2
+    assert res["ratio"] == pytest.approx(2.0)
+    counters = row["tier_counters"]
+    assert counters["demotions"] > 0 and counters["wakeups"] > 0
+    assert counters["modeled_tier_s"] > 0
+    # 3 probes+turns per session all found a resident row (no drops at this
+    # scale: host+pooled caps hold every session)
+    assert counters["cold_resumes"] == 0 and counters["drops"] == 0
+    ttft = row["turn2_ttft"]
+    assert sum(ttft["wakeups_by_tier"].values()) == 4
+    assert ttft["cold_reprefill_p50_s"] > 0
+    lat = row["decode_latency"]
+    assert lat["tiered_per_token_p50_s"] > 0 and lat["ratio"] > 0
+    mig = row["migration_extract"]
+    assert mig["per_slot_s"] > 0 and mig["batched_s"] > 0 and mig["slots"] == 4
+
+
 def test_training_bench_tiny_emits_wellformed_json(tmp_path):
     """training_bench --tiny drives the orchestrated and restart engines
     through fault scenarios and writes BENCH_training.json with the goodput

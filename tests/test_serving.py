@@ -338,3 +338,87 @@ def test_docs_link_check_catches_dangling(tmp_path):
     joined = "\n".join(problems)
     assert design in joined and missing in joined and gone in joined
     assert f"REAL{md}" not in joined and generated not in joined
+
+
+# ----------------------------------------------------------- request queue
+def test_request_queue_arrival_order_and_lazy_removal():
+    """The O(log n) queue rewrite pins the old deque semantics: closed-loop
+    requests stay in submission order, open-loop ones graduate exactly at
+    their arrival time, and removal is lazy but externally invisible."""
+    from repro.runtime.serving import RequestQueue
+
+    def mk(i, at=None):
+        return Request(rid=i, prompt=np.ones((4,), np.int32), max_new_tokens=1,
+                       arrival_time=at)
+
+    q = RequestQueue()
+    a, b, c, d = mk(0), mk(1, at=5.0), mk(2), mk(3, at=2.0)
+    for r in (a, b, c, d):
+        q.push(r)
+    assert len(q) == 4
+    assert [r.rid for r in q.arrived(0.0)] == [0, 2]  # closed-loop only
+    assert q.next_arrival() == 2.0
+    assert [r.rid for r in q.arrived(2.0)] == [0, 2, 3]  # d graduated
+    # the legacy "everything" view neither loses nor graduates pending work
+    assert [r.rid for r in q.arrived(None)] == [0, 1, 2, 3]
+    assert q.next_arrival() == 5.0
+    q.remove([a, d])
+    assert len(q) == 2
+    assert [r.rid for r in q.arrived(10.0)] == [1, 2]
+    e = mk(4, at=20.0)
+    q.push(e)
+    assert q.next_arrival() == 20.0
+    q.remove([e])  # removing a still-pending (heap) request
+    assert q.next_arrival() is None
+    assert len(q) == 2
+    q.remove([b, c])
+    assert len(q) == 0 and q.arrived(100.0) == []
+
+
+def test_request_queue_compaction_preserves_order():
+    """Bulk lazy deletions past the compaction threshold sweep the ready
+    list without disturbing submission order."""
+    from repro.runtime.serving import RequestQueue
+
+    q = RequestQueue()
+    reqs = [Request(rid=i, prompt=np.ones((2,), np.int32), max_new_tokens=1)
+            for i in range(200)]
+    for r in reqs:
+        q.push(r)
+    q.remove([reqs[i] for i in range(0, 200, 2)])
+    assert len(q) == 100
+    assert [r.rid for r in q.arrived(0.0)] == list(range(1, 200, 2))
+    assert len(q) == 100
+
+
+# ------------------------------------------------------- admission grouping
+def test_admission_groups_bucket_first_padding_regression(tiny):
+    """One long prompt in a mixed batch must not drag a whole pow2 group up
+    to its pad bucket: groups are single-bucket, padded-token count beats
+    the old arrival-order split, and the compiled prefill shape universe
+    stays O(buckets * log slots)."""
+    model, params = tiny
+    eng = ContinuousBatchingEngine(model, params, n_slots=8, max_len=256)
+    lens = [4, 100, 4, 4, 5, 6, 7, 8]
+    rng = np.random.default_rng(0)
+    picks = [
+        Request(rid=i, prompt=rng.integers(1, model.cfg.vocab, (l,)).astype(np.int32),
+                max_new_tokens=1)
+        for i, l in enumerate(lens)
+    ]
+    groups = eng._admission_groups(picks)
+    assert sorted(r.rid for g in groups for r in g) == list(range(8))
+    shapes, padded = set(), 0
+    for g in groups:
+        buckets = {eng._bucket(r.prompt_len) for r in g}
+        assert len(buckets) == 1  # a group never spans buckets
+        assert len(g) & (len(g) - 1) == 0  # pow2 group sizes
+        shapes.add((len(g), buckets.pop()))
+        padded += len(g) * eng._bucket(g[0].prompt_len)
+    # arrival order holds within a bucket
+    assert [r.rid for g in groups for r in g
+            if eng._bucket(r.prompt_len) == 8] == [0, 2, 3, 4, 5, 6, 7]
+    # old algorithm: one group of 8 arrival-order picks padded to bucket 128
+    assert padded == 184 < 8 * 128
+    n_buckets = len({eng._bucket(l) for l in lens})
+    assert len(shapes) <= n_buckets * (8).bit_length()

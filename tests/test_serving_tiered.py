@@ -1,0 +1,351 @@
+"""Tiered KV-cache memory pooling (docs/SERVING.md, memory hierarchy):
+demote -> promote round-trips are bit-exact (a resumed session's decode is
+identical to a never-demoted run), LRU spill/refill ordering across the
+host and modeled pooled tiers, demoted-ledger survival across a mid-run
+KV-pool migration, the batched extract_all/insert_all migration path, and
+the tier-extended ``KVPool.check`` invariants."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.collectives import CollectiveCostModel
+from repro.launch.jax_compat import make_mesh
+from repro.models import build_model
+from repro.runtime.orchestrator import FaultEvent, FaultSchedule
+from repro.runtime.serving import (
+    ContinuousBatchingEngine,
+    KVPool,
+    Request,
+    Scheduler,
+    SchedulerConfig,
+    SessionRecord,
+    TierConfig,
+    TieredKVPool,
+)
+from repro.runtime.serving_elastic import (
+    ServingOrchestrator,
+    ServingOrchestratorConfig,
+)
+from repro.runtime.sharding import reshard_params
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", remat=False, n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _mesh(n, mp=1):
+    return make_mesh((n // mp, mp), ("data", "model"), devices=jax.devices()[:n])
+
+
+def _engine(model, params, mesh=None, n_slots=2, max_len=48, seed=0,
+            tiers=TierConfig(host_sessions=4, pooled_sessions=4), audit=False):
+    if mesh is not None:
+        params = reshard_params(model.param_axes(), params, mesh)
+    return ContinuousBatchingEngine(
+        model, params, n_slots=n_slots, max_len=max_len, mesh=mesh, seed=seed,
+        tiers=tiers, audit=audit,
+    )
+
+
+def _prompt(model, seed, n=6):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, model.cfg.vocab, (n,)).astype(np.int32)
+
+
+# ------------------------------------------------------------ cost hooks
+def test_tier_transfer_cost_hooks():
+    cm = CollectiveCostModel()
+    mb = float(1 << 20)
+    to_host = cm.tier_transfer_cost(mb, "hbm", "host")
+    to_pooled = cm.tier_transfer_cost(mb, "host", "pooled")
+    assert to_host > 0 and to_pooled > to_host  # far tier is the slow hop
+    # a two-level move pays both hops (store-and-forward, like CLEX levels)
+    assert cm.tier_transfer_cost(mb, "hbm", "pooled") == pytest.approx(
+        to_host + to_pooled
+    )
+    # symmetric, zero on the diagonal, latency floor on empty transfers
+    assert cm.tier_transfer_cost(mb, "host", "hbm") == pytest.approx(to_host)
+    assert cm.tier_transfer_cost(mb, "host", "host") == 0.0
+    assert cm.tier_transfer_cost(0.0, "hbm", "host") == cm.hbm_host_latency
+    with pytest.raises(ValueError, match="unknown tier"):
+        cm.tier_transfer_cost(mb, "hbm", "disk")
+    # waking a host-resident row beats waking a pooled one beats re-prefilling
+    # a long prompt; a short fresh prompt can still undercut a far wakeup
+    assert cm.wakeup_cost(mb, "host") < cm.wakeup_cost(mb, "pooled")
+    assert cm.wakeup_cost(mb, "host") < cm.cold_prefill_cost(64)
+    assert cm.cold_prefill_cost(8) < cm.wakeup_cost(float(8 << 20), "pooled")
+
+
+def test_scheduler_prefers_waking_resident_session():
+    def req(rid, plen, tier=None, nbytes=0):
+        r = Request(rid=rid, prompt=np.ones((plen,), np.int32), max_new_tokens=4)
+        r.resume_tier, r.resume_bytes = tier, nbytes
+        return r
+
+    s = Scheduler(SchedulerConfig(policy="cost_aware"), CollectiveCostModel())
+    cold = req(0, plen=64)
+    wake = req(1, plen=64, tier="host", nbytes=1 << 20)
+    # one free slot: the cheap host wakeup wins over the cold prefill even
+    # though the cold request arrived first
+    assert [r.rid for r in s.select([cold, wake], n_free=1)] == [1]
+    # no resumable candidate: pure arrival order, exactly as before
+    assert [r.rid for r in s.select([req(0, 64), req(1, 8)], n_free=2)] == [0, 1]
+    # a big row parked in the far tier loses to a short fresh prompt
+    pooled = req(3, plen=64, tier="pooled", nbytes=8 << 20)
+    short = req(2, plen=8)
+    assert [r.rid for r in s.select([pooled, short], n_free=1)] == [2]
+
+
+# ------------------------------------------------- demote/promote round trip
+def test_session_resume_bit_exact_and_skips_prefill(tiny):
+    """A session served in two turns (demote between them) produces exactly
+    the token stream of one never-demoted request, and the second turn does
+    zero prefill work — the wakeup pages the row back instead."""
+    model, params = tiny
+    prompt = _prompt(model, seed=1, n=6)
+    g1, g2 = 5, 4
+
+    ref = _engine(model, params, tiers=None)
+    rid = ref.submit(prompt, g1 + g2, temperature=0.7)
+    full = ref.run()[rid]
+
+    eng = _engine(model, params, audit=True)
+    r1 = eng.submit(prompt, g1, temperature=0.7, session_id=7)
+    turn1 = eng.run()[r1]
+    np.testing.assert_array_equal(turn1, full[:g1])
+    assert eng.pool.session_tier(7) == "host"
+    assert eng.pool.n_used == 0 and eng.pool.resident_sessions == 1
+    assert eng.metrics.demotions == 1
+
+    history = np.concatenate([prompt, turn1])
+    prefills_before = eng.metrics.prefills
+    r2 = eng.submit(history, g2, temperature=0.7, session_id=7)
+    turn2 = eng.run()[r2]
+    np.testing.assert_array_equal(turn2, full[g1:])
+    assert eng.metrics.prefills == prefills_before  # wakeup skipped prefill
+    assert eng.metrics.wakeups == 1 and eng.metrics.cold_resumes == 0
+    assert eng.requests[r2].t_first is not None
+    # the resumed stream's audit indices are gap-free like any other
+    per = [i for r, i in eng.audit if r == r2]
+    assert per == list(range(len(turn2)))
+    eng.pool.check()
+
+
+def test_dropped_session_cold_resume_bit_exact(tiny):
+    """With zero-capacity tiers every demotion falls through to the
+    metadata-only dropped ledger; a resume then re-prefills the full history
+    cold but keeps the sampling identity — still bit-exact."""
+    model, params = tiny
+    prompt = _prompt(model, seed=2, n=5)
+    g1, g2 = 4, 3
+
+    ref = _engine(model, params, tiers=None)
+    rid = ref.submit(prompt, g1 + g2, temperature=0.5)
+    full = ref.run()[rid]
+
+    eng = _engine(model, params,
+                  tiers=TierConfig(host_sessions=0, pooled_sessions=0))
+    r1 = eng.submit(prompt, g1, temperature=0.5, session_id=3)
+    turn1 = eng.run()[r1]
+    np.testing.assert_array_equal(turn1, full[:g1])
+    assert eng.pool.session_tier(3) == "dropped"
+    assert eng.pool.resident_sessions == 0  # no row retained anywhere
+
+    history = np.concatenate([prompt, turn1])
+    r2 = eng.submit(history, g2, temperature=0.5, session_id=3)
+    turn2 = eng.run()[r2]
+    np.testing.assert_array_equal(turn2, full[g1:])
+    assert eng.metrics.cold_resumes == 1 and eng.metrics.wakeups == 0
+    assert eng.metrics.prefills >= 2  # the resume really did re-prefill
+    eng.pool.check()
+
+
+def test_session_contract_guard_rails(tiny):
+    model, params = tiny
+    eng = _engine(model, params)
+    prompt = _prompt(model, seed=3, n=4)
+    eng.submit(prompt, 3, session_id=1)
+    with pytest.raises(ValueError, match="in flight"):
+        eng.submit(prompt, 3, session_id=1)  # one request per session
+    eng.run()
+    with pytest.raises(ValueError, match="full token history"):
+        eng.submit(prompt, 2, session_id=1)  # resume must carry prompt+tokens
+
+
+# ------------------------------------------------------- spill/refill policy
+def test_lru_spill_refill_and_drop_ordering(tiny):
+    """Sessions demote in completion order; host overflow spills the least
+    recently demoted row to the pooled tier, pooled overflow drops the
+    oldest row to metadata.  Refill pays the extra pooled hop."""
+    model, params = tiny
+    eng = _engine(model, params,
+                  tiers=TierConfig(host_sessions=2, pooled_sessions=2))
+    prompts = {}
+    outs = {}
+    for sid in range(5):
+        prompts[sid] = _prompt(model, seed=10 + sid, n=4)
+        r = eng.submit(prompts[sid], 3, session_id=sid)
+        outs[sid] = eng.run()[r]
+    pool = eng.pool
+    assert sorted(pool.host) == [3, 4]  # hottest two stay on host
+    assert sorted(pool.pooled) == [1, 2]
+    assert sorted(pool.dropped) == [0]  # coldest fell off the end
+    assert pool.n_demote == 5 and pool.n_spill == 3 and pool.n_drop == 1
+    assert pool.resident_sessions == 4 and pool.demoted_sessions == 4
+    assert pool.modeled_tier_s > 0
+    pool.check()
+
+    # wake the pooled session 1: refill (pooled->host hop) then promote
+    history = np.concatenate([prompts[1], outs[1]])
+    r = eng.submit(history, 2, session_id=1)
+    assert len(eng.run()[r]) == 2
+    assert pool.n_refill == 1 and pool.n_promote == 1
+    assert eng.metrics.wakeups == 1
+    # non-session requests on a tiered engine still evict straight to the void
+    evict0 = pool.n_evict
+    r = eng.submit(_prompt(model, seed=99, n=4), 2)
+    eng.run()
+    assert pool.n_evict == evict0 + 1 and pool.demoted_sessions == 4
+    pool.check()
+
+
+def test_tiered_check_catches_ledger_corruption(tiny):
+    model, _ = tiny
+    pool = TieredKVPool(model, n_slots=2, capacity=16,
+                        tiers=TierConfig(host_sessions=1, pooled_sessions=1))
+    rec = SessionRecord(sid=0, pos=3, last_token=1, sample_rid=0, idx_base=4,
+                        row={"k": np.zeros((1, 2))}, nbytes=16)
+    pool.host[0] = rec
+    pool.check()  # well-formed
+    pool.pooled[0] = rec  # same session in two tiers
+    with pytest.raises(AssertionError, match="two tiers"):
+        pool.check()
+    del pool.pooled[0]
+    rec.row = None  # resident tier lost its row
+    with pytest.raises(AssertionError, match="lost its row"):
+        pool.check()
+    rec.row = {"k": np.zeros((1, 2))}
+    pool.host[1] = SessionRecord(sid=1, pos=1, last_token=0, sample_rid=1,
+                                 idx_base=1, row={"k": np.zeros((1, 2))})
+    with pytest.raises(AssertionError, match="over capacity"):
+        pool.check()
+    with pytest.raises(ValueError, match=">= 0"):
+        TierConfig(host_sessions=-1)
+
+
+# --------------------------------------------- batched migration primitives
+def test_extract_all_insert_all_match_per_slot_path(tiny):
+    """The batched gather path is bit-identical to per-slot extract/insert —
+    it only collapses k device->host syncs into one."""
+    model, params = tiny
+    eng = ContinuousBatchingEngine(model, params, n_slots=3, max_len=24)
+    for i in range(3):
+        eng.submit(_prompt(model, seed=20 + i, n=4 + i), 8)
+    for _ in range(3):  # ragged positions
+        eng.step(0.0)
+    pool = eng.pool
+    slots = pool.active_slots()
+    assert len(slots) == 3
+    batched = pool.extract_all(slots)
+    for s, row in zip(slots, batched):
+        for a, b in zip(jax.tree.leaves(pool.extract(s)), jax.tree.leaves(row)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # insert_all into a fresh pool round-trips
+    dst = KVPool(model, n_slots=3, capacity=24)
+    dslots = [dst.allocate(i) for i in range(3)]
+    dst.insert_all(dslots, batched)
+    for d, row in zip(dslots, batched):
+        for a, b in zip(jax.tree.leaves(row), jax.tree.leaves(dst.extract(d))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # guard rails
+    assert pool.extract_all([]) == []
+    with pytest.raises(ValueError, match="slots but"):
+        dst.insert_all(dslots[:2], batched)
+    dst.free(dslots[0])
+    with pytest.raises(ValueError, match="not allocated"):
+        dst.insert_all([dslots[0]], batched[:1])
+
+
+# --------------------------------------------- ledger survival across faults
+def test_demoted_ledger_survives_mid_run_migrate(tiny):
+    """A session demoted before a device loss wakes up bit-exact *after* the
+    pool migrated onto the survivor mesh: the ledger rides along host-side,
+    and the in-flight requests keep their gap-free streams."""
+    model, params = tiny
+    prompt = _prompt(model, seed=5, n=5)
+    g1, g2 = 2, 3
+
+    ref = _engine(model, params, tiers=None, n_slots=3)
+    rid = ref.submit(prompt, g1 + g2, temperature=0.6)
+    full = ref.run()[rid]
+
+    eng = _engine(model, params, mesh=_mesh(4), n_slots=3, audit=True)
+    sched = FaultSchedule([FaultEvent(step=4, kind="device_loss", devices=2)])
+    orch = ServingOrchestrator(eng, sched,
+                               ServingOrchestratorConfig(shrink_pool=False))
+    r1 = eng.submit(prompt, g1, temperature=0.6, session_id=0)
+    fillers = [eng.submit(_prompt(model, seed=30 + i, n=4), 10) for i in range(2)]
+    out = orch.run(clock=lambda: 0.0)
+    turn1 = out[r1]
+    np.testing.assert_array_equal(turn1, full[:g1])
+    assert all(len(out[f]) == 10 for f in fillers)
+    assert len(orch.report.migrations) == 1
+    mig = orch.report.migrations[0]
+    # session 0 finished (budget 2) well before the step-4 fault: its
+    # demoted row was in the ledger during the collapse and survived it
+    assert mig["demoted_sessions"] == 1
+    eng.pool.check()
+    assert eng.pool.session_tier(0) == "host"
+
+    history = np.concatenate([prompt, turn1])
+    r2 = eng.submit(history, g2, temperature=0.6, session_id=0)
+    turn2 = eng.run()[r2]
+    np.testing.assert_array_equal(turn2, full[g1:])
+    assert eng.metrics.wakeups == 1
+    eng.pool.check()
+    assert eng.pool.n_used == 0
+
+
+def test_migrate_carries_active_sessions_and_ledger(tiny):
+    """engine.migrate with a session request *in flight*: the live row moves
+    through extract_all/insert_all with its sampling identity, demoted rows
+    stay resident, and the stream completes bit-exact."""
+    model, params = tiny
+    prompt = _prompt(model, seed=6, n=5)
+
+    # reference: same (seed, rid, idx) sampling stream — the target request
+    # must be rid 1 in both engines, so the reference gets a dummy rid 0
+    ref = _engine(model, params, tiers=None, n_slots=2)
+    ref.submit(_prompt(model, seed=7, n=4), 2)
+    rid = ref.submit(prompt, 8, temperature=0.4)
+    full = ref.run()[rid]
+
+    eng = _engine(model, params, n_slots=2)
+    # park one finished session, then catch another mid-decode
+    r0 = eng.submit(_prompt(model, seed=7, n=4), 2, session_id=11)
+    eng.run()
+    r1 = eng.submit(prompt, 8, temperature=0.4, session_id=12)
+    for _ in range(3):
+        eng.step(0.0)
+    assert not eng.requests[r1].done
+    eng.migrate(n_slots=4)  # grow: still one gather, one scatter
+    eng.pool.check()
+    assert eng.pool.session_tier(11) == "host"  # ledger adopted
+    out = eng.run()
+    np.testing.assert_array_equal(out[r1], full)
+    assert eng.pool.session_tier(12) == "host"  # finished post-migrate, demoted
+    eng.pool.check()
