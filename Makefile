@@ -3,8 +3,8 @@ PYTEST ?= python -m pytest
 # Coverage gate: enforced whenever pytest-cov is importable (CI always
 # installs it via requirements-dev.txt; the pinned container may lack the
 # wheel, in which case verify runs without the gate rather than failing on
-# a missing plugin).  73 is a floor — raise it as coverage grows.
-COVFLAGS := $(shell python -c "import pytest_cov" 2>/dev/null && echo "--cov=repro --cov-fail-under=73")
+# a missing plugin).  74 is a floor — raise it as coverage grows.
+COVFLAGS := $(shell python -c "import pytest_cov" 2>/dev/null && echo "--cov=repro --cov-fail-under=74")
 
 .PHONY: verify verify-slow test deps linkcheck bench-training bench-serving bench-sim
 
@@ -19,7 +19,8 @@ verify: linkcheck
 	PYTHONPATH=src $(PYTEST) -x -q $(COVFLAGS)
 
 # Soak tier (nightly CI): long chaos/soak tests marked `slow`, excluded from
-# the tier-1 gate by pytest.ini's default `-m "not slow"`.
+# the tier-1 gate by pytest.ini's default `-m "not slow"`.  Includes the
+# diurnal-load + loss/gain autoscaling soak (docs/SERVING.md).
 verify-slow:
 	PYTHONPATH=src $(PYTEST) -q -m slow
 
@@ -36,12 +37,14 @@ bench-training:
 
 # Serving bench (docs/SERVING.md): continuous vs one-shot, the faulted
 # open-loop scenarios (elastic orchestrated serving vs engine-restart
-# baseline), and the tiered KV-cache pooling section (memory hierarchy vs
-# discard-on-evict).  Writes benchmarks/results/BENCH_serving.json and syncs
-# the repo-root copy.  CI smokes:
+# baseline), the tiered KV-cache pooling section (memory hierarchy vs
+# discard-on-evict), and the diurnal autoscaling soak (closed loop with
+# grow + shed vs shrink-only).  Writes benchmarks/results/BENCH_serving.json
+# and syncs the repo-root copy.  CI smokes:
 #   make bench-serving BENCH_SERVING_FLAGS="--tiny --fault-only"
 #   make bench-serving BENCH_SERVING_FLAGS="--tiny --tiered-only"
-BENCH_SERVING_FLAGS ?= --fault --tiered
+#   make bench-serving BENCH_SERVING_FLAGS="--tiny --diurnal-only"
+BENCH_SERVING_FLAGS ?= --fault --tiered --diurnal
 bench-serving:
 	PYTHONPATH=src python -m benchmarks.serving_bench $(BENCH_SERVING_FLAGS)
 

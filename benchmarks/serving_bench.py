@@ -17,6 +17,13 @@ Drives two workloads against both engines and writes
   time-to-first-token by tier (host/pooled wakeup vs cold re-prefill),
   steady-state per-token decode latency, and the batched ``extract_all``
   migration-pause micro-bench.
+* ``diurnal`` (``--diurnal``) — a diurnal-load (quiet -> burst -> quiet)
+  soak over a rolling ``device_loss -> device_gain`` cycle, on a virtual
+  clock.  The closed loop (``runtime/autoscale.py``) regrows the mesh and
+  KV pool at the gain and sheds the burst's queue tail; the shrink-only
+  ablation strips the gains and never sheds, so its goodput flatlines at
+  the post-loss capacity.  The committed row pins closed-loop goodput
+  beating shrink-only after the gain.
 * ``faulted_open_poisson`` (``--fault``) — the same open-loop stream with
   runtime faults injected mid-run (device loss; a straggling host).  The
   orchestrated engine (``runtime/serving_elastic.py``) migrates the live
@@ -351,6 +358,176 @@ def _run_tiered(model, params, args, vocab, rng):
     return row
 
 
+class _StepClock:
+    """Deterministic virtual clock for the diurnal soak: each call advances
+    a fixed dt, so arrivals, deadlines, and latencies are measured in
+    virtual seconds and the comparison is compile- and wall-noise-free."""
+
+    def __init__(self, dt: float = 2e-3):
+        self.t = 0.0
+        self.dt = dt
+
+    def __call__(self) -> float:
+        self.t += self.dt
+        return self.t
+
+
+def _run_diurnal_path(model, params, prompts, budgets, arrivals, slots,
+                      max_len, spec, *, closed_loop, shed_depth, gain_step,
+                      window):
+    """One diurnal soak run.  ``closed_loop=True`` keeps the gain events and
+    arms the autoscale controller (shed over ``shed_depth``); False strips
+    the gains and never sheds — the shrink-only ablation that flatlines at
+    the post-loss capacity."""
+    from repro.launch.mesh import make_elastic_mesh
+    from repro.runtime.autoscale import AutoscaleConfig
+    from repro.runtime.orchestrator import FaultSchedule
+    from repro.runtime.serving import ContinuousBatchingEngine
+    from repro.runtime.serving_elastic import (
+        ServingOrchestrator,
+        ServingOrchestratorConfig,
+    )
+    from repro.runtime.sharding import reshard_params
+
+    mesh = make_elastic_mesh(model_parallel=1)
+    events = spec if closed_loop else [
+        e for e in spec if e["kind"] not in ("device_gain", "pod_gain")
+    ]
+    sched = FaultSchedule.from_spec(events, n_devices=int(mesh.devices.size))
+    engine = ContinuousBatchingEngine(
+        model, reshard_params(model.param_axes(), params, mesh),
+        n_slots=slots, max_len=max_len, mesh=mesh,
+    )
+    autoscale = AutoscaleConfig(
+        shed_depth=shed_depth if closed_loop else None,
+        resume_depth=max(shed_depth // 4, 1),
+        pressure_patience=2,
+    )
+    orch = ServingOrchestrator(
+        engine, sched, ServingOrchestratorConfig(autoscale=autoscale)
+    )
+    rids = [
+        engine.submit(p, b, arrival_time=float(t))
+        for p, b, t in zip(prompts, budgets, arrivals)
+    ]
+    out = orch.run(clock=_StepClock())
+    rep = orch.report
+    lat = [
+        engine.requests[r].t_done - engine.requests[r].arrival_time
+        for r in rids if r in out
+    ]
+    # Fixed window right after the gain boundary, where both paths are
+    # still backlog-saturated.  Averaging to end-of-run instead would
+    # dilute the closed loop with its (faster) drain-down tail and hide
+    # the regrown capacity.
+    lo = min(gain_step, len(rep.step_tokens))
+    post = rep.step_tokens[lo:lo + window]
+    return {
+        "path": "closed_loop" if closed_loop else "shrink_only",
+        "tokens": rep.tokens,
+        "steps": rep.steps,
+        "completed": len(out),
+        "shed": rep.shed + engine.metrics.deadline_drops,
+        "shed_tokens": engine.metrics.shed_tokens,
+        "migrations": [
+            {k: m[k] for k in ("step", "reason", "lost_devices", "survivors",
+                               "n_slots")}
+            for m in rep.migrations
+        ],
+        "controller_transitions": rep.controller_transitions,
+        # goodput in tokens per scheduling round, sliced after the gain
+        # boundary — virtual-clock deterministic, compile-noise-free
+        "tokens_per_step": rep.tokens / rep.steps if rep.steps else 0.0,
+        "step_tokens": list(rep.step_tokens),
+        "post_gain_tokens_per_step": (
+            sum(post) / len(post) if post else 0.0
+        ),
+        "latency_p50_virtual_s": _percentile(lat, 50),
+        "latency_p99_virtual_s": _percentile(lat, 99),
+    }
+
+
+def _run_diurnal(model, params, args, vocab, rng):
+    """Diurnal-load + rolling-fault soak: quiet -> burst -> quiet arrivals
+    over a device_loss -> device_gain cycle.  The closed loop (grow + shed)
+    regrows the mesh and KV pool at the gain and sheds the burst tail; the
+    shrink-only ablation stays at post-loss capacity and its goodput
+    flatlines — the committed row pins closed-loop beating shrink-only
+    after the gain."""
+    import jax
+
+    total = len(jax.devices())
+    # the loss lands in the quiet phase (few live rows, so the pool really
+    # shrinks); the gain lands once the burst has built a backlog — exactly
+    # the regrow-under-pressure moment the closed loop is for
+    if args.tiny:
+        n_quiet, n_burst = 4, 16
+        budget_lo, budget_hi = 2, 6
+        # gain lands at the burst onset so the post-gain window is
+        # backlog-saturated in both paths
+        loss_step, gain_step, slots, shed_depth = 2, 18, 3, 6
+        window = 8
+    else:
+        n_quiet, n_burst = 12, 40
+        budget_lo, budget_hi = 6, 16
+        loss_step, gain_step, slots, shed_depth = 4, 60, 4, 8
+        window = 20
+    n = 2 * n_quiet + n_burst
+    prompt_lo, prompt_hi = 4, 10
+    prompts, budgets = _workload(
+        rng, n, prompt_lo, prompt_hi, budget_lo, budget_hi, vocab
+    )
+    # quiet -> burst -> quiet in virtual seconds (the soak clock advances
+    # ~4ms per scheduling round)
+    arrivals = np.concatenate([
+        0.02 * np.arange(n_quiet),
+        0.02 * n_quiet + 0.0005 * np.arange(n_burst),
+        0.02 * n_quiet + 0.03 + 0.02 * np.arange(n_quiet),
+    ]).tolist()
+    lost = max(1, total // 2)
+    spec = [
+        {"step": loss_step, "kind": "device_loss", "devices": lost},
+        {"step": gain_step, "kind": "device_gain", "devices": lost},
+    ]
+    run_args = (model, params, prompts, budgets, arrivals, slots,
+                prompt_hi + budget_hi + 8, spec)
+    closed = _run_diurnal_path(*run_args, closed_loop=True,
+                               shed_depth=shed_depth, gain_step=gain_step,
+                               window=window)
+    shrink = _run_diurnal_path(*run_args, closed_loop=False,
+                               shed_depth=shed_depth, gain_step=gain_step,
+                               window=window)
+    row = {
+        "config": {
+            "requests": n,
+            "phases": {"quiet": n_quiet, "burst": n_burst},
+            "slots": slots,
+            "shed_depth": shed_depth,
+            "new_tokens": [budget_lo, budget_hi],
+            "schedule": spec,
+        },
+        "closed_loop": closed,
+        "shrink_only": shrink,
+        "post_gain_goodput_ratio": (
+            closed["post_gain_tokens_per_step"]
+            / shrink["post_gain_tokens_per_step"]
+            if shrink["post_gain_tokens_per_step"] else 0.0
+        ),
+        "p99_ratio": (
+            shrink["latency_p99_virtual_s"] / closed["latency_p99_virtual_s"]
+            if closed["latency_p99_virtual_s"] else 0.0
+        ),
+    }
+    print(
+        f"diurnal: closed-loop {closed['post_gain_tokens_per_step']:.2f} "
+        f"tok/step after the gain ({closed['shed']} shed, "
+        f"{len(closed['migrations'])} migrations) vs shrink-only "
+        f"{shrink['post_gain_tokens_per_step']:.2f} tok/step — goodput "
+        f"x{row['post_gain_goodput_ratio']:.2f}, p99 x{row['p99_ratio']:.2f}"
+    )
+    return row
+
+
 def _fault_workload_stats(requests, out, rids, t0, wall_s, redone=0):
     lat = [requests[r].t_done - (requests[r].arrival_time or t0) for r in rids]
     tokens = sum(len(out[r]) for r in rids if r in out)
@@ -644,12 +821,19 @@ def main(argv=None) -> dict:
                     help="run only the tiered section (implies --tiered)")
     ap.add_argument("--sessions", type=int, default=48,
                     help="tiered section: number of two-turn sessions")
+    ap.add_argument("--diurnal", action="store_true",
+                    help="add the diurnal-load + rolling-fault soak (closed "
+                         "loop with grow + shed vs shrink-only ablation)")
+    ap.add_argument("--diurnal-only", action="store_true",
+                    help="run only the diurnal soak (implies --diurnal)")
     ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "results"))
     args = ap.parse_args(argv)
     if args.fault_only:
         args.fault = True
     if args.tiered_only:
         args.tiered = True
+    if args.diurnal_only:
+        args.diurnal = True
 
     os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
     import jax
@@ -687,7 +871,7 @@ def main(argv=None) -> dict:
         }
     }
 
-    if not args.fault_only and not args.tiered_only:
+    if not args.fault_only and not args.tiered_only and not args.diurnal_only:
         # ---- closed-loop: everything arrives at t=0
         cont = _run_continuous(model, params, prompts, budgets, args.slots, max_len, args.policy)
         base = _run_one_shot(model, params, prompts, budgets, args.slots, max_len)
@@ -725,6 +909,11 @@ def main(argv=None) -> dict:
         # ---- tiered KV-cache pooling: resident capacity, wakeup TTFT, and
         # steady-state decode latency vs the discard-on-evict baseline
         results["tiered"] = _run_tiered(model, params, args, cfg.vocab, rng)
+
+    if args.diurnal:
+        # ---- diurnal soak: closed-loop autoscaling (grow on device_gain,
+        # shed on queue pressure) vs the shrink-only ablation
+        results["diurnal"] = _run_diurnal(model, params, args, cfg.vocab, rng)
 
     if args.fault:
         # ---- faulted open-loop: elastic orchestrated serving vs the
@@ -782,6 +971,7 @@ def main(argv=None) -> dict:
         not args.tiny
         and not args.fault_only
         and not args.tiered_only
+        and not args.diurnal_only
         and os.path.abspath(args.out)
         == os.path.abspath(os.path.join(os.path.dirname(__file__), "results"))
     ):

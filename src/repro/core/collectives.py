@@ -331,6 +331,19 @@ class CollectiveCostModel:
         compares this against :meth:`wakeup_cost` when ordering admission."""
         return max(float(prompt_tokens), 0.0) * self.prefill_s_per_token
 
+    def migration_cost(self, nbytes: float, overhead_s: float = 0.0) -> float:
+        """Modeled seconds to migrate ``nbytes`` of live state onto a new
+        mesh: a device -> host -> device round trip over the staging link
+        (the extract/insert wire path both orchestrators use), plus a flat
+        ``overhead_s`` for remesh/recompile.  ``runtime/autoscale.py``
+        compares this against the remaining straggler slowdown to decide
+        whether a drain is worth its price (docs/TRAINING.md,
+        docs/SERVING.md)."""
+        return (
+            2.0 * (max(nbytes, 0.0) / self.hbm_host_bw + self.hbm_host_latency)
+            + max(overhead_s, 0.0)
+        )
+
     def moe_dispatch_cost(
         self,
         tokens: float,

@@ -84,6 +84,18 @@ def main() -> None:
     ap.add_argument("--turns", type=int, default=1,
                     help="tiered: serve each session this many turns; turns "
                          "after the first resume the demoted session")
+    ap.add_argument("--shed-depth", type=int, default=0,
+                    help="orchestrated: shed the queue tail once the arrived "
+                         "backlog exceeds this depth (0 = never shed)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="drop requests not admitted within this many seconds "
+                         "of arrival (0 = no deadlines)")
+    ap.add_argument("--spare-devices", type=int, default=0,
+                    help="warm spares device_gain events may admit beyond "
+                         "previously-lost chips")
+    ap.add_argument("--no-price-drains", action="store_true",
+                    help="always drain stragglers instead of pricing the "
+                         "migration against the remaining slowdown")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -144,12 +156,30 @@ def main() -> None:
             temperature=args.temperature,
             arrival_time=None if arrivals is None else base + float(arrivals[i]),
             session_id=i if args.tiered else None,
+            deadline=(
+                None if args.deadline_s <= 0
+                else base + (float(arrivals[i]) if arrivals is not None else 0.0)
+                + args.deadline_s
+            ),
         )
         for i, (p, b) in enumerate(zip(prompts, budgets))
     ]
 
     if args.orchestrate:
-        orch = ServingOrchestrator(engine, load_schedule(args.fault_schedule))
+        from ..runtime.autoscale import AutoscaleConfig
+        from ..runtime.serving_elastic import ServingOrchestratorConfig
+
+        ocfg = ServingOrchestratorConfig(
+            autoscale=AutoscaleConfig(
+                shed_depth=args.shed_depth or None,
+                resume_depth=max(args.shed_depth // 4, 1),
+                deadline_s=args.deadline_s or None,
+                price_drains=not args.no_price_drains,
+            ),
+            spare_devices=args.spare_devices,
+        )
+        orch = ServingOrchestrator(engine, load_schedule(args.fault_schedule),
+                                   cfg=ocfg)
         out = orch.run()
         dt = time.time() - t0
         report = orch.report
@@ -159,21 +189,22 @@ def main() -> None:
             f"orchestrated serving done: {report.tokens} tokens in "
             f"{report.wall_s:.2f}s (goodput {report.goodput():.1f} tok/s), "
             f"{len(report.migrations)} migrations ({len(report.drains)} "
-            f"straggler drains), {len(report.repricings)} repricings, "
-            f"final {report.final_state}"
+            f"straggler drains, {len(report.drains_tolerated)} tolerated), "
+            f"{report.shed + engine.metrics.deadline_drops} shed, "
+            f"{len(report.repricings)} repricings, final {report.final_state}"
         )
     else:
         out = engine.run()
         dt = time.time() - t0
 
-    toks = sum(len(out[r]) for r in rids)
+    toks = sum(len(out[r]) for r in rids if r in out)
 
     # multi-turn sessions: wake every demoted session for each extra turn —
     # resident rows page back in and skip re-prefill; dropped ones
     # re-prefill cold (either way the stream stays bit-exact)
     if args.tiered and args.turns > 1:
         histories = {i: np.concatenate([prompts[i], out[rids[i]]])
-                     for i in range(len(rids))}
+                     for i in range(len(rids)) if rids[i] in out}
         for _ in range(args.turns - 1):
             turn_rids = {
                 i: engine.submit(h, resume_budget,
@@ -205,7 +236,7 @@ def main() -> None:
             f"cold_resumes={m.cold_resumes} spills={p.n_spill} "
             f"refills={p.n_refill} modeled_tier_s={p.modeled_tier_s:.4f}"
         )
-    for r in rids[:4]:
+    for r in [r for r in rids if r in out][:4]:
         print("  ", out[r].tolist())
 
 

@@ -32,6 +32,7 @@ from ..configs.base import ARCH_IDS, ParallelConfig, get_config
 from ..data.pipeline import SyntheticLM
 from ..models import build_model
 from ..optim.adamw import AdamWConfig
+from ..runtime.autoscale import AutoscaleConfig
 from ..runtime.fault_tolerance import StragglerMonitor
 from ..runtime.orchestrator import Orchestrator, OrchestratorConfig, load_schedule
 from ..runtime.trainer import Trainer
@@ -59,7 +60,18 @@ def main() -> None:
     ap.add_argument("--orchestrate", action="store_true",
                     help="elastic fault-tolerant loop (docs/TRAINING.md)")
     ap.add_argument("--fault-schedule", type=str, default="",
-                    help="JSON list of fault events, or @path/to/file.json")
+                    help="JSON list of fault events, or @path/to/file.json; "
+                         "device_gain/pod_gain events regrow the data axis")
+    ap.add_argument("--drain-stragglers", action="store_true",
+                    help="remesh away from hosts still slow after the "
+                         "patience window (drains are priced: tiny "
+                         "stragglers are tolerated)")
+    ap.add_argument("--no-price-drains", action="store_true",
+                    help="always drain stragglers instead of pricing the "
+                         "remesh against the remaining slowdown")
+    ap.add_argument("--spare-devices", type=int, default=0,
+                    help="warm spares device_gain events may admit beyond "
+                         "previously-lost chips")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -101,6 +113,9 @@ def main() -> None:
             cfg=OrchestratorConfig(
                 ckpt_dir=args.ckpt_dir or None,
                 ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+                drain_stragglers=args.drain_stragglers,
+                autoscale=AutoscaleConfig(price_drains=not args.no_price_drains),
+                spare_devices=args.spare_devices,
             ),
             microbatches=args.microbatches,
         )
@@ -110,8 +125,10 @@ def main() -> None:
         print(
             f"orchestrated run done: {report.useful_steps} useful steps in "
             f"{report.wall_s:.1f}s (goodput {report.goodput():.2f} steps/s), "
-            f"{len(report.remesh_events)} remesh, {len(report.sync_switches)} "
-            f"sync decisions, {report.restores} restores, final {report.final_state}"
+            f"{len(report.remesh_events)} remesh "
+            f"({len(report.drains_tolerated)} drains tolerated), "
+            f"{len(report.sync_switches)} sync decisions, {report.restores} "
+            f"restores, final {report.final_state}"
         )
         return
 

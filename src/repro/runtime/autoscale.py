@@ -1,0 +1,150 @@
+"""SLO-driven autoscale controller shared by the training and serving
+orchestrators (docs/SERVING.md, docs/TRAINING.md).
+
+Both orchestrators can shrink (device/pod loss, straggler drains) and — as
+of the closed-loop autoscaling work — grow (``device_gain``/``pod_gain``
+re-admission).  What neither should own is the *policy* of when those
+levers are worth pulling.  This module is that policy, in one place:
+
+* :class:`AutoscaleController` — a small hysteresis state machine over an
+  observed load signal (serving: :class:`~repro.runtime.serving.RequestQueue`
+  depth; training could feed straggler pressure).  States::
+
+      STEADY --load > shed_depth--> PRESSURE --patience--> SHED
+      SHED --load <= resume_depth--> STEADY
+
+  In ``SHED`` the serving orchestrator sheds queue tail down to
+  ``shed_depth`` (reject) and the engine drops requests past their
+  deadline — open-loop queues stop building unboundedly, and goodput
+  accounting never counts the shed tokens.
+
+* :meth:`AutoscaleController.drain_decision` — *priced* drains: a straggler
+  is only drained (remeshed away from) when the remaining slowdown it
+  would inject exceeds the modeled cost of migrating the live state
+  (:meth:`~repro.core.collectives.CollectiveCostModel.migration_cost`).
+  Tiny stragglers are tolerated instead of drained at a loss.  Both
+  orchestrators call this with their own notion of live bytes (serving:
+  active KV rows; training: params + optimizer moments).
+
+Gains are always accepted: a recovered host is free capacity, and the
+reverse migration reuses the same extract -> remesh -> insert wire path a
+loss does, so its price is already sunk into the event itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from ..core.collectives import CollectiveCostModel
+
+__all__ = [
+    "AutoscaleConfig",
+    "AutoscaleController",
+    "tree_nbytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscaleConfig:
+    """Controller knobs (docs/SERVING.md, docs/TRAINING.md):
+
+    * ``shed_depth`` — queue depth that arms shedding (``None`` disables
+      the shed loop entirely; drains are still priced);
+    * ``resume_depth`` — hysteresis: depth at which ``SHED`` relaxes back
+      to ``STEADY`` (must be <= ``shed_depth``);
+    * ``pressure_patience`` — consecutive over-depth observations before
+      ``PRESSURE`` hardens into ``SHED`` (one bursty arrival wave is not
+      an overload);
+    * ``deadline_s`` — default per-request deadline budget the serving
+      launcher attaches at submit time (``None``: no deadline drops);
+    * ``price_drains`` — compare drain cost vs remaining slowdown before
+      remeshing away a straggler (off: always drain, the pre-autoscale
+      behaviour);
+    * ``drain_overhead_s`` — flat remesh/recompile seconds added to the
+      modeled migration cost when pricing a drain.
+    """
+
+    shed_depth: int | None = None
+    resume_depth: int = 8
+    pressure_patience: int = 2
+    deadline_s: float | None = None
+    price_drains: bool = True
+    drain_overhead_s: float = 0.0
+
+    def __post_init__(self):
+        if self.shed_depth is not None and self.shed_depth < 1:
+            raise ValueError(f"shed_depth must be >= 1, got {self.shed_depth}")
+        if self.shed_depth is not None and self.resume_depth > self.shed_depth:
+            raise ValueError(
+                f"resume_depth ({self.resume_depth}) must not exceed "
+                f"shed_depth ({self.shed_depth}) — the hysteresis band "
+                f"would be inverted"
+            )
+        if self.pressure_patience < 1:
+            raise ValueError("pressure_patience must be >= 1")
+
+
+class AutoscaleController:
+    """The one controller both orchestrators consult.  Stateless apart from
+    the hysteresis counter, so a fresh instance per ``run()`` is cheap."""
+
+    STEADY, PRESSURE, SHED = "STEADY", "PRESSURE", "SHED"
+
+    def __init__(self, cfg: AutoscaleConfig = AutoscaleConfig(),
+                 cost_model: CollectiveCostModel = CollectiveCostModel()):
+        self.cfg = cfg
+        self.cost_model = cost_model
+        self.state = self.STEADY
+        self._over = 0
+        self.transitions: list = []  # (step, from_state, to_state, depth)
+
+    # ------------------------------------------------------------- shedding
+
+    def observe(self, depth: int, step: int = 0) -> int | None:
+        """Feed one load observation; returns the depth to shed the queue
+        down to (when in ``SHED``) or ``None`` (admit everything)."""
+        if self.cfg.shed_depth is None:
+            return None
+        prev = self.state
+        if self.state == self.SHED:
+            if depth <= self.cfg.resume_depth:
+                self.state, self._over = self.STEADY, 0
+        elif depth > self.cfg.shed_depth:
+            self._over += 1
+            self.state = (
+                self.SHED if self._over >= self.cfg.pressure_patience
+                else self.PRESSURE
+            )
+        else:
+            self.state, self._over = self.STEADY, 0
+        if self.state != prev:
+            self.transitions.append((step, prev, self.state, depth))
+        return self.cfg.shed_depth if self.state == self.SHED else None
+
+    # ------------------------------------------------------------- draining
+
+    def drain_decision(
+        self, nbytes: float, slowdown: float, remaining_steps: int
+    ) -> dict:
+        """Price a straggler drain: migrate ``nbytes`` of live state now vs
+        eat ``slowdown`` seconds/step for ``remaining_steps`` more steps.
+        Returns the decision record the orchestrators append to their
+        reports: ``{"drain": bool, "cost_s": ..., "remaining_slow_s": ...}``.
+        """
+        remaining = max(slowdown, 0.0) * max(remaining_steps, 0)
+        cost = self.cost_model.migration_cost(
+            nbytes, overhead_s=self.cfg.drain_overhead_s
+        )
+        drain = (not self.cfg.price_drains) or remaining > cost
+        return {"drain": drain, "cost_s": cost, "remaining_slow_s": remaining}
+
+
+def tree_nbytes(tree) -> float:
+    """Bytes of live array state in a pytree — the ``nbytes`` both
+    orchestrators feed :meth:`AutoscaleController.drain_decision` (serving
+    scales it to the active-slot fraction of the KV pool)."""
+    return float(
+        sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+    )

@@ -100,11 +100,18 @@ class ElasticPlan:
 
 
 def plan_remesh(
-    surviving_devices: int, model_parallel: int, global_batch: int, prev_dp: int
+    surviving_devices: int,
+    model_parallel: int,
+    global_batch: int,
+    prev_dp: int,
+    prev_microbatches: int = 1,
 ) -> ElasticPlan:
-    """Shrink the data axis to the surviving devices, keep the model axis
-    (parameter sharding must still fit), and raise grad-accumulation so the
-    global batch — and training dynamics — are unchanged."""
+    """Resize the data axis to the surviving devices — shrink *or* grow —
+    keep the model axis (parameter sharding must still fit), and adjust
+    grad-accumulation so the global batch — and training dynamics — are
+    unchanged.  ``prev_microbatches`` carries the accumulation already in
+    force, so a shrink→grow round trip lands back at the original plan
+    (``dp * microbatches`` is invariant) instead of compounding."""
     if model_parallel <= 0:
         raise ValueError(f"model_parallel must be positive, got {model_parallel}")
     if surviving_devices <= 0:
@@ -113,13 +120,15 @@ def plan_remesh(
         raise ValueError(
             f"global_batch and prev_dp must be positive, got {global_batch} / {prev_dp}"
         )
+    if prev_microbatches <= 0:
+        raise ValueError(f"prev_microbatches must be positive, got {prev_microbatches}")
     if surviving_devices < model_parallel:
         raise ValueError("fewer devices than the model-parallel degree; cannot re-mesh")
     dp = surviving_devices // model_parallel
     # largest power-of-two dp that divides the global batch
     while dp > 1 and (global_batch % dp or dp & (dp - 1)):
         dp -= 1
-    micro = max(1, prev_dp // dp)
+    micro = max(1, prev_dp * prev_microbatches // dp)
     return ElasticPlan(
         data_parallel=dp,
         model_parallel=model_parallel,

@@ -59,6 +59,7 @@ from ..launch import jax_compat
 from ..launch.mesh import make_elastic_mesh
 from ..optim.adamw import AdamWConfig
 from . import sharding as shd
+from .autoscale import AutoscaleConfig, AutoscaleController, tree_nbytes
 from .fault_tolerance import StragglerMonitor, plan_remesh
 from .trainer import Trainer
 
@@ -73,7 +74,10 @@ __all__ = [
     "reshard_to_mesh",
 ]
 
-EVENT_KINDS = ("device_loss", "pod_loss", "straggler", "link_degraded", "link_restored")
+EVENT_KINDS = (
+    "device_loss", "pod_loss", "device_gain", "pod_gain",
+    "straggler", "link_degraded", "link_restored",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +89,10 @@ class FaultEvent:
 
     * ``device_loss`` — ``devices`` chips disappear;
     * ``pod_loss``    — ``devices`` whole pods disappear;
+    * ``device_gain`` — ``devices`` recovered/replacement chips rejoin
+      (grow the data axis back; only previously-lost or declared-spare
+      chips may rejoin — :meth:`FaultSchedule.validate`);
+    * ``pod_gain``    — ``devices`` whole pods rejoin;
     * ``straggler``   — ``slowdown`` extra seconds per step for ``duration``
       steps (an injected slow host);
     * ``link_degraded`` — top-level links drop to ``bandwidth_factor`` of
@@ -103,7 +111,10 @@ class FaultEvent:
             raise ValueError(f"unknown fault kind {self.kind!r}; expected one of {EVENT_KINDS}")
         if self.step < 0:
             raise ValueError(f"fault step must be >= 0, got {self.step}")
-        if self.kind in ("device_loss", "pod_loss") and self.devices <= 0:
+        if (
+            self.kind in ("device_loss", "pod_loss", "device_gain", "pod_gain")
+            and self.devices <= 0
+        ):
             raise ValueError(f"{self.kind} needs devices >= 1, got {self.devices}")
         if self.kind == "straggler" and (self.slowdown < 0 or self.duration <= 0):
             raise ValueError("straggler needs slowdown >= 0 and duration >= 1")
@@ -130,6 +141,8 @@ class FaultSchedule:
         n_devices: int | None = None,
         model_parallel: int = 1,
         n_pods: int = 1,
+        spare_devices: int = 0,
+        spare_pods: int = 0,
     ) -> "FaultSchedule":
         """Build from a list of dicts (the ``--fault-schedule`` JSON knob):
         ``[{"step": 5, "kind": "device_loss", "devices": 2}, ...]``.
@@ -137,24 +150,45 @@ class FaultSchedule:
         When ``n_devices`` is given the schedule is validated against that
         machine up front (:meth:`validate`) so an event targeting devices or
         pods that do not exist fails with a clear ``ValueError`` at parse
-        time instead of deep inside a remesh."""
+        time instead of deep inside a remesh.  ``spare_devices``/
+        ``spare_pods`` declare warm spares that gain events may admit even
+        though they never appeared in a loss."""
         sched = cls(tuple(FaultEvent(**item) for item in spec))
         if n_devices is not None:
-            sched.validate(n_devices, model_parallel=model_parallel, n_pods=n_pods)
+            sched.validate(
+                n_devices, model_parallel=model_parallel, n_pods=n_pods,
+                spare_devices=spare_devices, spare_pods=spare_pods,
+            )
         return sched
 
     def validate(
-        self, n_devices: int, model_parallel: int = 1, n_pods: int = 1
+        self,
+        n_devices: int,
+        model_parallel: int = 1,
+        n_pods: int = 1,
+        spare_devices: int = 0,
+        spare_pods: int = 0,
     ) -> "FaultSchedule":
-        """Check every loss/drain event against the machine it will run on,
-        tracking cumulative survivors in step order: an event that targets
-        more devices or pods than remain (or that would leave fewer chips
-        than the model-parallel degree needs) raises ``ValueError`` here,
-        not ``plan_remesh``-deep at fault time."""
+        """Check every loss/gain/drain event against the machine it will run
+        on, tracking cumulative survivors in step order — *including
+        regrowth*, so a ``pod_loss`` that follows a ``device_gain`` is
+        checked against the grown topology, not the low-water mark.  An
+        event that targets more devices or pods than remain (or that would
+        leave fewer chips than the model-parallel degree needs) raises
+        ``ValueError`` here, not ``plan_remesh``-deep at fault time.
+
+        Gain events may only re-admit capacity that previously left
+        (cumulative lost devices/pods) or was declared up front as warm
+        spares (``spare_devices``/``spare_pods``) — a gain from nowhere is
+        a schedule bug, not elasticity."""
         if n_devices <= 0:
             raise ValueError(f"n_devices must be positive, got {n_devices}")
         survivors, pods = n_devices, max(n_pods, 1)
         pod_size = n_devices // max(n_pods, 1)
+        # re-admittable pools: what has left the machine so far (plus any
+        # declared spares) is what a gain event may bring back
+        regrow_devices = max(spare_devices, 0)
+        regrow_pods = max(spare_pods, 0)
         for ev in sorted(self.events, key=lambda e: e.step):
             if ev.kind == "device_loss":
                 lost = ev.devices
@@ -170,7 +204,29 @@ class FaultSchedule:
                         f"nonexistent pods — only {pods} remain"
                     )
                 pods -= ev.devices
+                regrow_pods += ev.devices
                 lost = ev.devices * pod_size
+            elif ev.kind == "device_gain":
+                if ev.devices > regrow_devices:
+                    raise ValueError(
+                        f"step {ev.step}: device_gain of {ev.devices} exceeds "
+                        f"the {regrow_devices} re-admittable devices "
+                        f"(previously lost or declared spare_devices)"
+                    )
+                regrow_devices -= ev.devices
+                survivors += ev.devices
+                continue
+            elif ev.kind == "pod_gain":
+                if ev.devices > regrow_pods:
+                    raise ValueError(
+                        f"step {ev.step}: pod_gain of {ev.devices} exceeds "
+                        f"the {regrow_pods} re-admittable pods "
+                        f"(previously lost or declared spare_pods)"
+                    )
+                regrow_pods -= ev.devices
+                pods += ev.devices
+                survivors += ev.devices * pod_size
+                continue
             elif ev.kind == "straggler":
                 if ev.devices >= survivors:
                     raise ValueError(
@@ -191,6 +247,8 @@ class FaultSchedule:
                     f"the parameter shards would have no home"
                 )
             survivors -= lost
+            if ev.kind in ("device_loss", "straggler"):
+                regrow_devices += ev.devices
         return self
 
     @classmethod
@@ -301,6 +359,13 @@ class OrchestratorConfig:
       device-loss path (docs/TRAINING.md) instead of eating the slowdown
       for the event's whole duration.  Off by default: draining trades
       capacity for speed, a policy call.
+    * ``autoscale`` — the shared :class:`~repro.runtime.autoscale.AutoscaleConfig`:
+      drain *pricing* (migration cost vs remaining slowdown — tiny
+      stragglers are tolerated rather than drained at a loss) and, on the
+      serving twin, queue shedding.
+    * ``spare_devices``/``spare_pods`` — warm spares ``device_gain``/
+      ``pod_gain`` events may admit beyond previously-lost capacity
+      (threaded into :meth:`FaultSchedule.validate`).
     """
 
     ckpt_dir: str | None = None
@@ -313,6 +378,9 @@ class OrchestratorConfig:
     switch_threshold: float = 1.5
     drain_stragglers: bool = False
     straggler_patience: int = 2
+    autoscale: AutoscaleConfig = AutoscaleConfig()
+    spare_devices: int = 0
+    spare_pods: int = 0
 
 
 @dataclasses.dataclass
@@ -326,6 +394,7 @@ class OrchestratorReport:
     sync_switches: list = dataclasses.field(default_factory=list)
     straggler_steps: list = dataclasses.field(default_factory=list)
     straggler_drains: list = dataclasses.field(default_factory=list)
+    drains_tolerated: list = dataclasses.field(default_factory=list)
     injected_slow_s: float = 0.0  # straggler seconds actually eaten
     slow_s_avoided: float = 0.0  # straggler seconds a drain cut short
     mesh_history: list = dataclasses.field(default_factory=list)
@@ -387,10 +456,18 @@ class Orchestrator:
                 int(self.mesh_ctx.mesh.devices.size),
                 model_parallel=self.mesh_ctx.model_size(),
                 n_pods=self.mesh_ctx.axis_size("pod", 1),
+                spare_devices=cfg.spare_devices,
+                spare_pods=cfg.spare_pods,
             )
         self.schedule = schedule
         self.cfg = cfg
         self.microbatches = microbatches
+        # logical survivor count: the mesh may use fewer chips than survive
+        # (model-axis divisibility), so losses/gains are tracked against the
+        # machine, not the mesh
+        self._avail = (
+            int(self.mesh_ctx.mesh.devices.size) if self.mesh_ctx is not None else 1
+        )
         # pod size is a property of the *original* hierarchy: a remesh
         # collapses the pod axis, but later pod_loss events still mean
         # "a pod's worth of the original machine disappeared"
@@ -454,23 +531,24 @@ class Orchestrator:
 
     # ------------------------------------------------------------- handlers
 
-    def _apply_loss(self, ev: FaultEvent, params, opt_state, report, step,
-                    label: str | None = None):
-        sizes = self.mesh_ctx.axis_sizes()
-        total = 1
-        for n in sizes.values():
-            total *= n
-        lost = ev.devices * (self._pod_size if ev.kind == "pod_loss" else 1)
-        survivors = total - lost
-        mp = sizes.get("model", 1)
+    def _remesh_to(self, survivors, delta, kind, params, opt_state, report, step):
+        """Shared remesh path for losses *and* gains: plan the new data
+        axis over ``survivors`` chips, rebuild the mesh, and move the live
+        training state onto it in memory (``device_put``, bit-exact).  The
+        reverse migration a ``device_gain`` triggers is the same wire path
+        a loss uses — only the direction of the mesh change differs."""
+        mp = self.mesh_ctx.axis_sizes().get("model", 1)
         plan = plan_remesh(
-            survivors, mp, self._global_batch, prev_dp=self.mesh_ctx.dp_size()
+            survivors, mp, self._global_batch,
+            prev_dp=self.mesh_ctx.dp_size(),
+            prev_microbatches=self.microbatches,
         )
         new_mesh = make_elastic_mesh(plan.data_parallel * plan.model_parallel, mp)
         t0 = time.monotonic()
         params, opt_state = reshard_to_mesh(self.model, params, opt_state, new_mesh)
         self.mesh_ctx = jax_compat.MeshContext.from_any(new_mesh)
         self.microbatches = plan.microbatches
+        self._avail = survivors
         # a 2-D survivor mesh has no pod axis: degraded-sync tiering (and its
         # err slots, dropped by the reshard) no longer applies there
         if "pod" not in self.mesh_ctx.axis_names:
@@ -480,19 +558,35 @@ class Orchestrator:
         self._rebuild()
         reshard_s = time.monotonic() - t0
         rec = {
-            "step": step, "kind": label or ev.kind, "lost_devices": lost,
+            "step": step, "kind": kind, "lost_devices": delta,
             "survivors": survivors, "mesh": self._mesh_shape(),
             "microbatches": plan.microbatches, "reshard_s": reshard_s,
             "note": plan.note,
         }
         report.remesh_events.append(rec)
         report.mesh_history.append((step, self._mesh_shape()))
+        verb = "REMESH" if delta >= 0 else "GROW"
         report.log.append(
-            f"step {step}: {label or ev.kind} ({lost} chips) -> REMESH onto "
+            f"step {step}: {kind} ({abs(delta)} chips) -> {verb} onto "
             f"{self._mesh_shape()} (in-memory reshard {reshard_s * 1e3:.1f} ms, "
             f"no restore)"
         )
         return params, opt_state
+
+    def _apply_loss(self, ev: FaultEvent, params, opt_state, report, step,
+                    label: str | None = None):
+        lost = ev.devices * (self._pod_size if ev.kind == "pod_loss" else 1)
+        return self._remesh_to(
+            self._avail - lost, lost, label or ev.kind,
+            params, opt_state, report, step,
+        )
+
+    def _apply_gain(self, ev: FaultEvent, params, opt_state, report, step):
+        gained = ev.devices * (self._pod_size if ev.kind == "pod_gain" else 1)
+        return self._remesh_to(
+            self._avail + gained, -gained, ev.kind,
+            params, opt_state, report, step,
+        )
 
     def _apply_link(self, ev: FaultEvent, params, opt_state, report, step):
         self.link_factor = ev.bandwidth_factor if ev.kind == "link_degraded" else 1.0
@@ -527,6 +621,8 @@ class Orchestrator:
     def _apply_event(self, ev, params, opt_state, report, step):
         if ev.kind in ("device_loss", "pod_loss"):
             return self._apply_loss(ev, params, opt_state, report, step)
+        if ev.kind in ("device_gain", "pod_gain"):
+            return self._apply_gain(ev, params, opt_state, report, step)
         return self._apply_link(ev, params, opt_state, report, step)
 
     # ------------------------------------------------------------- run
@@ -552,6 +648,8 @@ class Orchestrator:
         report.mesh_history.append((start_step, self._mesh_shape()))
         monitor = StragglerMonitor()
         stragglers = StragglerLedger()
+        controller = AutoscaleController(self.cfg.autoscale, self.cfg.cost_model)
+        tolerated: set = set()  # id(entry) of stragglers priced not-worth-draining
         ckpt = (
             AsyncCheckpointer()
             if self.cfg.ckpt_dir and self.cfg.ckpt_every > 0
@@ -585,6 +683,27 @@ class Orchestrator:
                 # injected slowdown disappears with it
                 if self.cfg.drain_stragglers:
                     for entry in stragglers.drainable(self.cfg.straggler_patience):
+                        if id(entry) in tolerated:
+                            continue
+                        # priced drain: migrating params+opt must cost less
+                        # than the slowdown the drain would avoid
+                        nbytes = tree_nbytes(params) + tree_nbytes(
+                            {k: v for k, v in opt_state.items() if k != "step"}
+                        )
+                        decision = controller.drain_decision(
+                            nbytes, entry[0].slowdown, entry[1]
+                        )
+                        if not decision["drain"]:
+                            tolerated.add(id(entry))
+                            report.drains_tolerated.append(
+                                dict(decision, step=step, kind="straggler")
+                            )
+                            report.log.append(
+                                f"step {step}: straggler tolerated — drain "
+                                f"costs {decision['cost_s']:.2e}s vs "
+                                f"{decision['remaining_slow_s']:.2e}s remaining"
+                            )
+                            continue
                         avoided = stragglers.cancel(entry)
                         params, opt_state = self._apply_loss(
                             entry[0], params, opt_state, report, step,

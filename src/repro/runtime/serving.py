@@ -71,6 +71,9 @@ __all__ = [
 
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+# SHED: rejected at submit (queue over max_queue_depth) or dropped past its
+# deadline — never allocated a KV slot, never counted toward goodput
+SHED = "shed"
 
 # compiled closures (engine prefill/decode, pool slot-writes) shared across
 # instances with the same configuration — a migration or restart that lands
@@ -95,6 +98,10 @@ class Request:
     # the cache row is demoted (not discarded) and a later request with the
     # same session_id wakes it up instead of re-prefilling
     session_id: Optional[int] = None
+    # deadline: absolute time after which the request is worthless; an
+    # unadmitted request past its deadline is dropped (state SHED) and
+    # refunded from the queue instead of wasting a slot
+    deadline: Optional[float] = None
 
     state: str = QUEUED
     tokens_out: list = dataclasses.field(default_factory=list)
@@ -783,6 +790,11 @@ class EngineMetrics:
     demotions: int = 0  # finished sessions parked in the hierarchy
     wakeups: int = 0  # resumes served from a resident row (prefill skipped)
     cold_resumes: int = 0  # resumes whose row was dropped (re-prefilled)
+    # admission-control shedding (docs/SERVING.md, autoscaling): shed work
+    # never allocates a KV slot and never counts toward goodput
+    rejected: int = 0  # refused at submit (queue over max_queue_depth)
+    deadline_drops: int = 0  # dropped unadmitted past their deadline
+    shed_tokens: int = 0  # token budget of all shed requests (not served)
 
     @property
     def slot_utilization(self) -> float:
@@ -818,6 +830,7 @@ class ContinuousBatchingEngine:
         min_prompt_bucket: int = 8,
         audit: bool = False,
         tiers: Optional[TierConfig] = None,
+        max_queue_depth: Optional[int] = None,
     ):
         if model.cfg.enc_dec:
             raise NotImplementedError("continuous batching supports decoder-only models")
@@ -827,6 +840,10 @@ class ContinuousBatchingEngine:
         self.pad_id = pad_id
         self.seed = seed
         self.queue = RequestQueue()
+        # admission control: submissions past this queue depth are rejected
+        # (state SHED) instead of building an unbounded backlog; None = admit
+        # everything (the pre-autoscaling behaviour)
+        self.max_queue_depth = max_queue_depth
         # tiers=TierConfig(...) turns on the memory hierarchy: finished
         # sessions demote to host/pooled and wake up via submit(session_id=)
         self.tiers = tiers
@@ -1040,6 +1057,7 @@ class ContinuousBatchingEngine:
         dispatch_weight: Optional[float] = None,
         now: Optional[float] = None,
         session_id: Optional[int] = None,
+        deadline: Optional[float] = None,
     ) -> int:
         """Enqueue one request; returns its request id.
 
@@ -1051,7 +1069,14 @@ class ContinuousBatchingEngine:
         prompt + every generated token), and admission pages the resident
         row back in and skips re-prefill (or re-prefills the history if the
         row was dropped — either way the continuation is bit-exact).  One
-        request may be in flight per session at a time."""
+        request may be in flight per session at a time.
+
+        ``deadline`` (absolute, same clock as ``arrival_time``): past it an
+        unadmitted request is dropped instead of served late.  When the
+        engine was built with ``max_queue_depth`` and the queue is already
+        that deep, the request is rejected outright: its state is ``SHED``,
+        no KV slot is ever allocated, and its id is still returned so the
+        caller can observe the rejection (``engine.requests[rid].state``)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size < 1:
             raise ValueError("empty prompt")
@@ -1062,6 +1087,23 @@ class ContinuousBatchingEngine:
                 f"prompt ({prompt.size}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds pool capacity {self.pool.capacity}"
             )
+        if self.max_queue_depth is not None and len(self.queue) >= self.max_queue_depth:
+            req = Request(
+                rid=next(self._rid),
+                prompt=prompt,
+                max_new_tokens=int(max_new_tokens),
+                temperature=float(temperature),
+                eos_id=eos_id,
+                arrival_time=arrival_time,
+                session_id=session_id,
+                deadline=deadline,
+                state=SHED,
+                t_submit=now if now is not None else time.monotonic(),
+            )
+            self.requests[req.rid] = req
+            self.metrics.rejected += 1
+            self.metrics.shed_tokens += req.max_new_tokens
+            return req.rid
         if session_id is not None and self.pool.tiered:
             if session_id in self._busy_sessions:
                 raise ValueError(
@@ -1085,6 +1127,7 @@ class ContinuousBatchingEngine:
                 self._dispatch_weight if dispatch_weight is None else dispatch_weight
             ),
             session_id=session_id,
+            deadline=deadline,
             t_submit=now if now is not None else time.monotonic(),
         )
         self.requests[req.rid] = req
@@ -1206,12 +1249,54 @@ class ContinuousBatchingEngine:
             self._slot_req[slot] = None
             req.slot = None
 
+    def _shed_queued(self, reqs: list, *, deadline: bool) -> int:
+        """Drop still-queued requests: refund them from the queue (lazy
+        delete — amortised O(log n) per request), mark them ``SHED``, and
+        release any session reservation.  No KV slot was ever allocated for
+        a queued request, so there is nothing to free in the pool."""
+        victims = [r for r in reqs if r.state == QUEUED]
+        if not victims:
+            return 0
+        self.queue.remove(victims)
+        for r in victims:
+            r.state = SHED
+            self.metrics.shed_tokens += r.max_new_tokens
+            if r.session_id is not None:
+                self._busy_sessions.discard(r.session_id)
+        if deadline:
+            self.metrics.deadline_drops += len(victims)
+        else:
+            self.metrics.rejected += len(victims)
+        return len(victims)
+
+    def shed_queue(self, keep_depth: int, now: Optional[float] = None) -> int:
+        """Autoscale actuation (``runtime/autoscale.py``): shed the *newest*
+        queued requests until at most ``keep_depth`` remain in the arrived
+        backlog — the oldest work has waited longest and is closest to its
+        deadline, so the tail is the cheapest to turn away.  ``now=None``
+        sheds against the full queue view (pending arrivals included).
+        Returns the number shed."""
+        backlog = self.queue.arrived(now)  # arrival-ordered
+        excess = len(backlog) - max(keep_depth, 0)
+        if excess <= 0:
+            return 0
+        return self._shed_queued(backlog[len(backlog) - excess:], deadline=False)
+
     def step(self, now: Optional[float] = None) -> int:
         """One scheduling round: admit, then one ragged decode step for all
         active slots.  Returns the number of tokens produced."""
         if now is None:
             now = time.monotonic()
         produced = 0
+
+        # ---- deadline drops: an unadmitted request past its deadline is
+        # worthless — refund it from the queue before it wastes a slot
+        expired = [
+            r for r in self.queue.arrived(now)
+            if r.deadline is not None and now > r.deadline
+        ]
+        if expired:
+            self._shed_queued(expired, deadline=True)
 
         # ---- admission: fill freed slots from the queue
         candidates = (

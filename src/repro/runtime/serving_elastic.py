@@ -21,10 +21,24 @@ orchestrator understands:
   ledger is host-side and device-independent: it is carried to the rebuilt
   pool untouched, so sessions parked before the collapse still wake up
   afterwards without re-prefill.
+* **device/pod gain** → the reverse: a recovered or replacement host
+  re-admits through the *same* migration path onto a grown mesh
+  (``make_elastic_mesh`` over more chips), the KV pool re-expands toward
+  its original slot count, and warm host-tier sessions promote back into
+  the regrown HBM slots as admission picks them up — the canonical
+  partition property run backwards.
 * **straggler** → after ``straggler_patience`` slowed steps, *drain* the
   slow host: migrate its slots away through the same path and remesh
   without it, cutting the remaining injected slowdown short (the p99
-  protection the low-latency-topology line of work argues for).
+  protection the low-latency-topology line of work argues for).  Drains
+  are *priced* (``runtime/autoscale.py``): when migrating the live rows
+  costs more than the slowdown remaining in the straggler, it is
+  tolerated instead of drained at a loss.
+* **queue pressure** → the shared :class:`~repro.runtime.autoscale.AutoscaleController`
+  sheds the queue tail (reject) once the arrived backlog outruns
+  ``shed_depth``, and the engine drops unadmitted requests past their
+  deadline — open-loop queues stop building unboundedly, and shed tokens
+  never count toward goodput.
 * **link degradation** → re-price admission: the scheduler's
   :class:`~repro.core.collectives.CollectiveCostModel` is swapped for its
   ``degraded(bandwidth_factor)`` counterpart, so the a2a budget admits
@@ -55,6 +69,7 @@ import numpy as np
 from ..launch import jax_compat
 from ..launch.mesh import make_elastic_mesh
 from . import sharding as shd
+from .autoscale import AutoscaleConfig, AutoscaleController, tree_nbytes
 from .orchestrator import FaultSchedule, StragglerLedger
 from .serving import ContinuousBatchingEngine
 
@@ -70,14 +85,23 @@ class ServingOrchestratorConfig:
     """Knobs (docs/SERVING.md):
 
     * ``shrink_pool`` — scale the KV pool with the survivor fraction on
-      migration (HBM shrinks with the machine); never below the number of
-      in-flight requests, which must all keep their rows.
+      migration (HBM shrinks with the machine — and grows back with it on a
+      gain); never below the number of in-flight requests, which must all
+      keep their rows.
     * ``straggler_patience`` — slowed steps tolerated before the slow host
       is drained (its slots migrated away, its chips remeshed out).
+    * ``autoscale`` — the shared :class:`~repro.runtime.autoscale.AutoscaleConfig`:
+      queue-depth shedding thresholds and drain *pricing* (a drain whose
+      migration cost exceeds the remaining slowdown is tolerated instead).
+    * ``spare_devices``/``spare_pods`` — warm spares gain events may admit
+      beyond previously-lost capacity (``FaultSchedule.validate``).
     """
 
     shrink_pool: bool = True
     straggler_patience: int = 2
+    autoscale: AutoscaleConfig = AutoscaleConfig()
+    spare_devices: int = 0
+    spare_pods: int = 0
 
 
 @dataclasses.dataclass
@@ -86,9 +110,15 @@ class ServingReport:
 
     steps: int = 0
     tokens: int = 0
+    # tokens produced by each scheduling round that did work — the diurnal
+    # bench slices this at the gain step to compare post-regrow goodput
+    step_tokens: list = dataclasses.field(default_factory=list)
     wall_s: float = 0.0
     migrations: list = dataclasses.field(default_factory=list)
     drains: list = dataclasses.field(default_factory=list)
+    drains_tolerated: list = dataclasses.field(default_factory=list)
+    shed: int = 0  # requests the autoscale controller turned away
+    controller_transitions: list = dataclasses.field(default_factory=list)
     repricings: list = dataclasses.field(default_factory=list)
     injected_slow_s: float = 0.0
     slow_s_avoided: float = 0.0
@@ -134,7 +164,8 @@ class ServingOrchestrator:
         self._base_cost_model = engine.scheduler.cost_model
         self.mesh_ctx = jax_compat.MeshContext.from_any(engine.mesh)
         needs_mesh = any(
-            e.kind in ("device_loss", "pod_loss", "straggler")
+            e.kind in ("device_loss", "pod_loss", "device_gain", "pod_gain",
+                       "straggler")
             for e in schedule.events
         )
         if self.mesh_ctx is None and needs_mesh:
@@ -157,7 +188,18 @@ class ServingOrchestrator:
                 int(self.mesh_ctx.mesh.devices.size),
                 model_parallel=self.mesh_ctx.model_size(),
                 n_pods=self.mesh_ctx.axis_size("pod", 1),
+                spare_devices=cfg.spare_devices,
+                spare_pods=cfg.spare_pods,
             )
+        # logical survivor count and the baseline the pool rescales against:
+        # losses/gains are tracked against the *machine* (the mesh may idle
+        # chips for model-axis divisibility), and a full regrowth must land
+        # the pool back at its original slot count, not a shrunken echo
+        self._avail = (
+            int(self.mesh_ctx.mesh.devices.size) if self.mesh_ctx is not None else 1
+        )
+        self._base_devices = self._avail
+        self._base_slots = engine.pool.n_slots
         self.report = ServingReport()
 
     # ------------------------------------------------------------- helpers
@@ -170,11 +212,13 @@ class ServingOrchestrator:
 
     def _migrate(self, step: int, lost: int, reason: str, report) -> dict:
         """The live KV-pool migration: pause → extract → remesh/reshard →
-        insert → resume.  Returns the record appended to the report."""
-        ctx = self.mesh_ctx
-        total = int(ctx.mesh.devices.size)
-        survivors = total - lost
-        mp = ctx.model_size()
+        insert → resume.  ``lost`` may be *negative* — a ``device_gain``/
+        ``pod_gain`` re-admission grows the data axis through the exact same
+        wire path (the reverse migration is a forward migration onto a
+        bigger mesh), and the pool re-expands toward its original slot
+        count.  Returns the record appended to the report."""
+        survivors = self._avail - lost
+        mp = self.mesh_ctx.model_size()
         # the model axis is kept whole (parameter shards must still fit):
         # survivors that don't divide it are left idle, like plan_remesh
         usable = (survivors // mp) * mp
@@ -183,7 +227,9 @@ class ServingOrchestrator:
         n_active = len(eng.active_requests())
         n_slots = eng.pool.n_slots
         if self.cfg.shrink_pool:
-            scaled = int(np.ceil(eng.pool.n_slots * usable / total))
+            # base-relative: slots track the usable fraction of the original
+            # machine, so shrink→grow round trips restore the original pool
+            scaled = int(np.ceil(self._base_slots * usable / self._base_devices))
             n_slots = max(1, n_active, scaled)
         t0 = time.monotonic()
         eng.pause_admission()
@@ -194,6 +240,7 @@ class ServingOrchestrator:
         eng.resume_admission()
         self.state = "SERVING"
         self.mesh_ctx = jax_compat.MeshContext.from_any(new_mesh)
+        self._avail = survivors
         dt = time.monotonic() - t0
         rec = {
             "step": step, "reason": reason, "lost_devices": lost,
@@ -206,8 +253,9 @@ class ServingOrchestrator:
         }
         report.migrations.append(rec)
         report.mesh_history.append((step, self._mesh_shape()))
+        verb = "MIGRATE" if lost >= 0 else "GROW"
         report.log.append(
-            f"step {step}: {reason} ({lost} chips) -> MIGRATE {migrated} live "
+            f"step {step}: {reason} ({abs(lost)} chips) -> {verb} {migrated} live "
             f"KV slots onto {self._mesh_shape()} ({dt * 1e3:.0f} ms, admission "
             f"paused, decode resumes in place)"
         )
@@ -260,6 +308,8 @@ class ServingOrchestrator:
         wall = clock is None
         clock = clock or time.monotonic
         stragglers = StragglerLedger()
+        controller = AutoscaleController(self.cfg.autoscale, self._base_cost_model)
+        tolerated: set = set()  # id(entry) of stragglers priced not-worth-draining
         fired: set[int] = set()  # boundary steps whose events already applied
         t0 = time.monotonic()
         step = 0
@@ -276,10 +326,27 @@ class ServingOrchestrator:
                             self._pod_size if ev.kind == "pod_loss" else 1
                         )
                         self._migrate(step, lost, ev.kind, report)
+                    elif ev.kind in ("device_gain", "pod_gain"):
+                        gained = ev.devices * (
+                            self._pod_size if ev.kind == "pod_gain" else 1
+                        )
+                        self._migrate(step, -gained, ev.kind, report)
                     else:
                         self._reprice(ev, step, report)
                 for ev in self.schedule.stragglers_at(step):
                     stragglers.activate(ev)
+            # ---- autoscale shedding: when the arrived backlog outruns the
+            # shed threshold (with hysteresis), turn the queue tail away
+            now = clock()
+            keep = controller.observe(len(eng.queue.arrived(now)), step)
+            if keep is not None:
+                shed = eng.shed_queue(keep, now)
+                if shed:
+                    report.shed += shed
+                    report.log.append(
+                        f"step {step}: SHED {shed} queued requests "
+                        f"(backlog over {self.cfg.autoscale.shed_depth})"
+                    )
             made = eng.step(clock())
             report.tokens += made
             if made == 0:
@@ -302,6 +369,30 @@ class ServingOrchestrator:
                 if wall:
                     time.sleep(slow)
             for entry in stragglers.drainable(self.cfg.straggler_patience):
+                if id(entry) in tolerated:
+                    continue
+                # priced drain: the live KV rows are what a drain migrates —
+                # if moving them costs more than the slowdown left in the
+                # straggler, tolerate it instead of draining at a loss
+                pool = eng.pool
+                n_active = len(eng.active_requests())
+                row_bytes = (
+                    tree_nbytes(pool.caches) / pool.n_slots if pool.n_slots else 0.0
+                )
+                decision = controller.drain_decision(
+                    row_bytes * n_active, entry[0].slowdown, entry[1]
+                )
+                if not decision["drain"]:
+                    tolerated.add(id(entry))
+                    report.drains_tolerated.append(
+                        dict(decision, step=step, kind="straggler")
+                    )
+                    report.log.append(
+                        f"step {step}: straggler tolerated — drain costs "
+                        f"{decision['cost_s']:.2e}s vs "
+                        f"{decision['remaining_slow_s']:.2e}s remaining"
+                    )
+                    continue
                 avoided = stragglers.cancel(entry)
                 rec = self._migrate(step, entry[0].devices, "straggler_drain",
                                     report)
@@ -310,7 +401,9 @@ class ServingOrchestrator:
                 report.slow_s_avoided += avoided
             step += 1
             report.steps = step
+            report.step_tokens.append(made)
         report.wall_s = time.monotonic() - t0
+        report.controller_transitions = list(controller.transitions)
         report.final_state = self.state
         return {
             rid: np.asarray(r.tokens_out, np.int32)

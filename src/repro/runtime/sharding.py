@@ -174,7 +174,11 @@ def reshard_params(axes_tree, params, mesh):
     """``device_put`` every param leaf onto the ``NamedSharding`` the logical
     rules imply on ``mesh`` — pure data movement, bit-exact.  The shared core
     of the trainer's :func:`~repro.runtime.orchestrator.reshard_to_mesh` and
-    the serving orchestrator's KV-pool migration (both remesh onto a survivor
-    sub-hierarchy without any checkpoint round-trip)."""
+    the serving orchestrator's KV-pool migration.  Direction-agnostic: the
+    target mesh may be smaller (device/pod loss onto a survivor
+    sub-hierarchy) *or larger* (``device_gain`` re-admission regrows the
+    data axis) than where ``params`` currently live — either way no
+    checkpoint round-trip, and a shrink→grow round trip returns every leaf
+    bit-identical (``tests/test_orchestrator.py`` pins this)."""
     psh = param_shardings(axes_tree, mesh, params)
     return jax.tree.map(lambda x, s: jax.device_put(x, s), params, psh)

@@ -171,6 +171,37 @@ def test_serving_bench_tiny_tiered_smoke(tmp_path):
     assert mig["per_slot_s"] > 0 and mig["batched_s"] > 0 and mig["slots"] == 4
 
 
+def test_serving_bench_tiny_diurnal_smoke(tmp_path):
+    """serving_bench --tiny --diurnal-only runs the closed-loop autoscaling
+    soak (diurnal load, mid-run loss + gain, shed armed) against the
+    shrink-only ablation and writes the diurnal row (docs/SERVING.md).
+    Structure-only at tiny scale: the ~2x post-gain goodput margin is a
+    default-scale claim (the committed BENCH_serving.json)."""
+    from benchmarks.serving_bench import main
+
+    results = main(["--tiny", "--diurnal-only", "--out", str(tmp_path)])
+    on_disk = json.loads((tmp_path / "BENCH_serving.json").read_text())
+    assert set(on_disk) == set(results)
+    assert "closed_ragged" not in on_disk  # --diurnal-only skips base rows
+    row = on_disk["diurnal"]
+    closed, shrink = row["closed_loop"], row["shrink_only"]
+    # the closed loop took the gain (a reverse migration regrowing the
+    # pool); shrink-only stripped it and stayed at post-loss capacity
+    assert [m["reason"] for m in closed["migrations"]] == [
+        "device_loss", "device_gain"]
+    assert [m["reason"] for m in shrink["migrations"]] == ["device_loss"]
+    assert closed["migrations"][1]["n_slots"] > shrink["migrations"][0]["n_slots"]
+    # shedding engaged under the burst, and shed tokens left goodput
+    assert closed["shed"] > 0 and closed["completed"] < shrink["completed"]
+    assert any(t[2] == "SHED" for t in closed["controller_transitions"])
+    assert shrink["shed"] == 0
+    # per-round token ledger is exact
+    for path in (closed, shrink):
+        assert sum(path["step_tokens"]) == path["tokens"]
+        assert len(path["step_tokens"]) == path["steps"]
+    assert row["post_gain_goodput_ratio"] > 0 and row["p99_ratio"] > 0
+
+
 def test_training_bench_tiny_emits_wellformed_json(tmp_path):
     """training_bench --tiny drives the orchestrated and restart engines
     through fault scenarios and writes BENCH_training.json with the goodput

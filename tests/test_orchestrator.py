@@ -71,6 +71,10 @@ def test_fault_event_validation():
     with pytest.raises(ValueError):
         FaultEvent(step=0, kind="device_loss", devices=0)
     with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="device_gain", devices=0)
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="pod_gain", devices=-1)
+    with pytest.raises(ValueError):
         FaultEvent(step=0, kind="link_degraded", bandwidth_factor=0.0)
     with pytest.raises(ValueError):
         FaultEvent(step=0, kind="straggler", duration=0)
@@ -175,6 +179,53 @@ def test_device_loss_matches_uninterrupted_shrunken_run(model):
     assert diff < 1e-4, diff
 
 
+def test_device_gain_regrows_and_matches_uninterrupted_run(model):
+    """Tentpole acceptance: a loss -> gain cycle shrinks the data axis and
+    then regrows it in memory — params/opt reverse-migrate onto the larger
+    mesh, microbatches return to 1, and the final params match an
+    uninterrupted fault-free run on the full mesh (same replayed batches,
+    resharding is pure data movement)."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 virtual devices")
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+    pipe = SyntheticLM(vocab=model.cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    n_steps = 6
+
+    mesh_big = make_mesh((4, 1), ("data", "model"), devices=jax.devices()[:4])
+    sched = FaultSchedule((
+        FaultEvent(step=2, kind="device_loss", devices=2),
+        FaultEvent(step=4, kind="device_gain", devices=2),
+    ))
+    orch = Orchestrator(model, opt_cfg, mesh=mesh_big, schedule=sched)
+    t = Trainer(model, opt_cfg, mesh=mesh_big)
+    params, opt = t.init(jax.random.PRNGKey(0))
+    p_orch, _, report = orch.run(params, opt, pipe, n_steps)
+
+    assert report.restores == 0 and report.useful_steps == n_steps
+    assert len(report.remesh_events) == 2
+    shrink, grow = report.remesh_events
+    assert shrink["survivors"] == 2 and shrink["lost_devices"] == 2
+    assert grow["survivors"] == 4 and grow["lost_devices"] == -2
+    assert "data=4" in grow["mesh"]
+    assert grow["microbatches"] == 1  # grad-accum rolled back with the regrow
+    assert orch.microbatches == 1
+
+    # reference: the same batches, never interrupted, on the full mesh
+    t_ref = Trainer(model, opt_cfg, mesh=mesh_big)
+    params, opt = t_ref.init(jax.random.PRNGKey(0))
+    step_fn = t_ref.jitted_step(donate=False)
+    for step, raw in pipe.replay(0, n_steps):
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        with use_mesh(mesh_big):
+            params, opt, _ = step_fn(params, opt, batch)
+
+    diff = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(p_orch), jax.tree.leaves(params))
+    )
+    assert diff < 1e-4, diff
+
+
 def test_pod_loss_collapses_hierarchy(model):
     if len(jax.devices()) < 8:
         pytest.skip("needs 8 virtual devices")
@@ -267,6 +318,60 @@ def test_fault_schedule_from_spec_validates_against_machine():
     assert len(FaultSchedule.from_spec(ok, n_devices=8).events) == 2
     assert len(FaultSchedule.from_spec(
         [{"step": 0, "kind": "device_loss", "devices": 99}]).events) == 1
+
+
+def test_fault_schedule_gain_validation():
+    """Satellite: gain events may only re-admit previously-lost capacity or
+    declared warm spares — a gain from nowhere is a schedule bug."""
+    with pytest.raises(ValueError, match="re-admittable devices"):
+        FaultSchedule.from_spec(
+            [{"step": 0, "kind": "device_gain", "devices": 2}], n_devices=8)
+    with pytest.raises(ValueError, match="re-admittable pods"):
+        FaultSchedule.from_spec(
+            [{"step": 0, "kind": "pod_gain", "devices": 1}],
+            n_devices=8, n_pods=2)
+    # gain may not exceed what actually left
+    with pytest.raises(ValueError, match="re-admittable devices"):
+        FaultSchedule.from_spec(
+            [{"step": 1, "kind": "device_loss", "devices": 2},
+             {"step": 3, "kind": "device_gain", "devices": 4}], n_devices=8)
+    # declared spares make a fresh gain legal
+    assert len(FaultSchedule.from_spec(
+        [{"step": 0, "kind": "device_gain", "devices": 2}],
+        n_devices=8, spare_devices=2).events) == 1
+    # drained stragglers feed the pool too (as-if-drained on every path)
+    assert len(FaultSchedule.from_spec(
+        [{"step": 1, "kind": "straggler", "slowdown": 0.2, "devices": 2},
+         {"step": 9, "kind": "device_gain", "devices": 2}],
+        n_devices=8).events) == 2
+
+
+def test_fault_schedule_cumulative_tracking_includes_regrowth():
+    """Regression (satellite): validate() used to only ever decrement the
+    survivor count, so a legal loss -> gain -> loss spec was rejected
+    against the low-water mark.  Now the second loss is checked against the
+    regrown topology."""
+    spec = [
+        {"step": 1, "kind": "device_loss", "devices": 4},
+        {"step": 3, "kind": "device_gain", "devices": 4},
+        {"step": 5, "kind": "device_loss", "devices": 4},
+    ]
+    assert len(FaultSchedule.from_spec(spec, n_devices=8).events) == 3
+    # same shape at the pod level: the post-gain pod_loss sees the regrown
+    # pod count, and pod_gain restores the pod's worth of devices
+    pod_spec = [
+        {"step": 1, "kind": "pod_loss", "devices": 1},
+        {"step": 3, "kind": "pod_gain", "devices": 1},
+        {"step": 5, "kind": "pod_loss", "devices": 1},
+    ]
+    assert len(FaultSchedule.from_spec(
+        pod_spec, n_devices=8, n_pods=2).events) == 3
+    # but regrowth never mints capacity: the pool drains on use
+    with pytest.raises(ValueError, match="re-admittable devices"):
+        FaultSchedule.from_spec(
+            [{"step": 1, "kind": "device_loss", "devices": 2},
+             {"step": 3, "kind": "device_gain", "devices": 2},
+             {"step": 5, "kind": "device_gain", "devices": 2}], n_devices=8)
 
 
 def test_orchestrator_ctor_rejects_schedule_beyond_machine(model):
@@ -393,6 +498,55 @@ def test_plan_remesh_properties(survivors, mp, batch):
         mesh = make_elastic_mesh(plan.data_parallel * mp, mp)
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         assert sizes == {"data": plan.data_parallel, "model": mp}
+
+
+@given(
+    survivors=st.integers(min_value=1, max_value=32),
+    rejoin=st.integers(min_value=1, max_value=32),
+    mp=st.sampled_from([1, 2, 4]),
+    batch=st.sampled_from([8, 16, 64]),
+)
+@settings(max_examples=60, deadline=None)
+def test_plan_remesh_growth_properties(survivors, rejoin, mp, batch):
+    """Satellite: growing the machine never shrinks the data axis, keeps the
+    model axis and batch divisibility intact, and the dp*microbatches
+    product (the global-batch split) never drops below the shrunken plan's —
+    so a full regrow restores the original configuration."""
+    if survivors < mp:
+        return  # shrink plan itself is invalid; covered elsewhere
+    small = plan_remesh(survivors, mp, batch, prev_dp=8)
+    grown = plan_remesh(survivors + rejoin, mp, batch,
+                        prev_dp=small.data_parallel,
+                        prev_microbatches=small.microbatches)
+    assert grown.model_parallel == mp
+    assert grown.data_parallel * mp <= survivors + rejoin
+    assert batch % grown.data_parallel == 0
+    assert grown.data_parallel >= small.data_parallel  # growth never shrinks
+    assert (grown.data_parallel * grown.microbatches
+            >= small.data_parallel * small.microbatches)
+
+
+@given(
+    mp=st.sampled_from([1, 2, 4]),
+    batch=st.sampled_from([8, 16, 64]),
+    lost=st.integers(min_value=1, max_value=7),
+)
+@settings(max_examples=40, deadline=None)
+def test_plan_remesh_shrink_grow_round_trip(mp, batch, lost):
+    """Losing devices then re-admitting every one of them lands back on the
+    original (dp, microbatches) plan — elasticity round-trips."""
+    full = 8 * mp
+    orig = plan_remesh(full, mp, batch, prev_dp=full // mp)
+    if full - lost < mp:
+        return
+    shrunk = plan_remesh(full - lost, mp, batch,
+                         prev_dp=orig.data_parallel,
+                         prev_microbatches=orig.microbatches)
+    regrown = plan_remesh(full, mp, batch,
+                          prev_dp=shrunk.data_parallel,
+                          prev_microbatches=shrunk.microbatches)
+    assert regrown.data_parallel == orig.data_parallel
+    assert regrown.microbatches == orig.microbatches
 
 
 def test_plan_remesh_rejects_bad_inputs():

@@ -301,6 +301,94 @@ def test_engine_metrics_utilization(tiny):
     assert 0.5 < m.slot_utilization <= 1.0
 
 
+# ------------------------------------------------------- admission shedding
+def test_submit_reject_never_allocates_slot(tiny):
+    """Satellite: a request rejected at submit (queue over max_queue_depth)
+    is SHED without ever touching the KV pool — its id is still returned so
+    the caller can observe the state, and goodput excludes its budget."""
+    from repro.runtime.serving import SHED
+
+    model, params = tiny
+    eng = ContinuousBatchingEngine(model, params, n_slots=1, max_len=32,
+                                   policy="fcfs", seed=0, max_queue_depth=2)
+    rng = np.random.default_rng(8)
+    prompts = _prompts(rng, model.cfg.vocab, [4, 5, 6, 7])
+    rids = [eng.submit(p, 3) for p in prompts]
+    # first two fill the queue; the rest bounce off admission control
+    assert [eng.requests[r].state for r in rids] == ["queued"] * 2 + [SHED] * 2
+    assert eng.pool.n_alloc == 0  # nothing allocated at submit time
+    assert eng.metrics.rejected == 2
+    assert eng.metrics.shed_tokens == 6  # 2 rejected x 3-token budgets
+
+    out = eng.run()
+    assert set(out) == set(rids[:2])  # shed requests never produce output
+    assert [len(out[r]) for r in rids[:2]] == [3, 3]
+    # no slot leak, no double-completion: every allocation was evicted and
+    # only the two admitted requests ever touched the pool
+    assert eng.pool.n_alloc == eng.pool.n_evict == 2
+    assert [eng.requests[r].state for r in rids[2:]] == [SHED, SHED]
+
+
+def test_submit_reject_releases_no_session(tiny):
+    """A rejected tiered submit must not reserve the session identity —
+    the caller can retry the same session once the queue drains."""
+    from repro.runtime.serving import SHED, TierConfig
+
+    model, params = tiny
+    eng = ContinuousBatchingEngine(model, params, n_slots=1, max_len=32,
+                                   seed=0, tiers=TierConfig(),
+                                   max_queue_depth=1)
+    p = np.ones((4,), np.int32)
+    eng.submit(p, 2, session_id=0)
+    r_shed = eng.submit(p, 2, session_id=1)  # queue full -> SHED
+    assert eng.requests[r_shed].state == SHED
+    eng.run()
+    # session 1 was never reserved: resubmitting it is legal
+    r_retry = eng.submit(p, 2, session_id=1)
+    assert len(eng.run()[r_retry]) == 2
+
+
+def test_deadline_drop_refunds_queue(tiny):
+    """Satellite: an unadmitted request past its deadline is refunded from
+    the queue (lazy O(log n) delete) before it can waste a slot."""
+    from repro.runtime.serving import SHED
+
+    model, params = tiny
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
+                                   policy="fcfs", seed=0)
+    rng = np.random.default_rng(9)
+    p_live, p_dead = _prompts(rng, model.cfg.vocab, [4, 4])
+    r_live = eng.submit(p_live, 3)
+    r_dead = eng.submit(p_dead, 3, deadline=1.0)
+    out = eng.run(clock=lambda: 5.0)  # virtual now is past the deadline
+    # the expired request was dropped even though a slot was free for it
+    assert eng.requests[r_dead].state == SHED
+    assert eng.metrics.deadline_drops == 1 and eng.metrics.rejected == 0
+    assert eng.metrics.shed_tokens == 3
+    assert set(out) == {r_live} and len(out[r_live]) == 3
+    assert eng.pool.n_alloc == eng.pool.n_evict == 1  # dead req never allocated
+    assert len(eng.queue) == 0  # refunded, not orphaned
+
+
+def test_shed_queue_sheds_newest_tail_first(tiny):
+    """shed_queue(keep) turns away the *newest* arrivals: the oldest work
+    has waited longest and keeps its place at the head."""
+    from repro.runtime.serving import SHED
+
+    model, params = tiny
+    eng = ContinuousBatchingEngine(model, params, n_slots=1, max_len=32,
+                                   policy="fcfs", seed=0)
+    rng = np.random.default_rng(10)
+    rids = [eng.submit(p, 2) for p in _prompts(rng, model.cfg.vocab, [4] * 5)]
+    assert eng.shed_queue(keep_depth=2) == 3
+    states = [eng.requests[r].state for r in rids]
+    assert states == ["queued", "queued", SHED, SHED, SHED]
+    assert eng.metrics.rejected == 3 and eng.metrics.shed_tokens == 6
+    assert eng.shed_queue(keep_depth=2) == 0  # idempotent at the floor
+    out = eng.run()
+    assert set(out) == set(rids[:2])  # survivors complete normally
+
+
 # ---------------------------------------------------------------- docs gate
 def test_docs_link_check_repo_is_clean():
     import os

@@ -20,8 +20,9 @@ from _hypothesis_compat import given, settings, st
 from repro.configs.base import get_config
 from repro.launch.jax_compat import make_mesh
 from repro.models import build_model
+from repro.runtime.autoscale import AutoscaleConfig
 from repro.runtime.orchestrator import FaultEvent, FaultSchedule
-from repro.runtime.serving import ContinuousBatchingEngine, KVPool
+from repro.runtime.serving import ContinuousBatchingEngine, KVPool, TierConfig
 from repro.runtime.serving_elastic import (
     ServingOrchestrator,
     ServingOrchestratorConfig,
@@ -445,6 +446,185 @@ def test_chaos_randomized_faults_equivalent_to_shrunken_mesh(
         np.testing.assert_array_equal(out[a], outr[b])
 
 
+@given(
+    l1=st.integers(min_value=1, max_value=2),
+    g1=st.integers(min_value=1, max_value=2),
+    second=st.booleans(),
+    at=st.integers(min_value=1, max_value=3),
+    gap=st.integers(min_value=1, max_value=2),
+    wseed=st.integers(min_value=0, max_value=4),
+)
+@settings(max_examples=24, deadline=None)
+def test_chaos_grow_schedules_bit_exact(tiny, l1, g1, second, at, gap, wseed):
+    """Tentpole acceptance (grow-path chaos harness): randomized
+    shrink -> grow -> shrink schedules — loss size x gain size x timing x
+    optional second loss x workload — keep completed token streams
+    bit-identical to a fault-free run of the same seeded workload, with no
+    KV-slot leak and no double-completion.  A full regrowth also restores
+    the pool to its original slot count."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 virtual devices")
+    model, params = tiny
+    g1 = min(g1, l1)  # gains only re-admit what actually left
+    events = [
+        FaultEvent(step=at, kind="device_loss", devices=l1),
+        FaultEvent(step=at + gap, kind="device_gain", devices=g1),
+    ]
+    if second:
+        events.append(
+            FaultEvent(step=at + 2 * gap, kind="device_loss", devices=1))
+    sched = FaultSchedule(tuple(events))
+    prompts, budgets = _workload(model, seed=wseed, n=6, blo=4, bhi=8)
+
+    eng = _engine(model, params, mesh=_mesh(4), n_slots=3, seed=3)
+    orch = ServingOrchestrator(eng, sched)
+    rids = [eng.submit(p, b, temperature=0.5)
+            for p, b in zip(prompts, budgets)]
+    out = orch.run(clock=lambda: 0.0)
+
+    assert len(out) == len(rids), "every request must complete"
+    _assert_invariants(eng, out)
+    recs = orch.report.migrations
+    assert len(recs) == len(events)
+    assert recs[0]["lost_devices"] == l1
+    assert recs[1]["lost_devices"] == -g1  # the grow, through the same path
+    assert recs[1]["survivors"] == 4 - l1 + g1
+    if g1 == l1:
+        assert "data=4" in recs[1]["mesh"]
+        assert recs[1]["n_slots"] == 3  # full regrow restores the base pool
+    assert orch.report.final_state == "SERVING"
+
+    # dense-model streams are mesh/slot invariant, so the reference is the
+    # plain fault-free engine on the original mesh
+    ref = _engine(model, params, mesh=_mesh(4), n_slots=3, seed=3)
+    rref = [ref.submit(p, b, temperature=0.5)
+            for p, b in zip(prompts, budgets)]
+    outr = ref.run(clock=lambda: 0.0)
+    for a, b in zip(rids, rref):
+        np.testing.assert_array_equal(out[a], outr[b])
+
+
+def test_tiered_sessions_survive_shrink_and_promote_after_grow(tiny):
+    """Satellite: the demoted-session ledger rides shrink *and* grow
+    migrations untouched, and warm host rows promote back into the regrown
+    HBM slots on wakeup — no cold resume, streams bit-exact against a
+    never-faulted tiered run of the same two turns."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 virtual devices")
+    model, params = tiny
+    rng = np.random.default_rng(13)
+    prompts, _ = _workload(model, seed=13, n=2)
+    filler = rng.integers(1, model.cfg.vocab, (5,)).astype(np.int32)
+
+    def build():
+        mesh = _mesh(4)
+        pr = reshard_params(model.param_axes(), params, mesh)
+        return ContinuousBatchingEngine(
+            model, pr, n_slots=3, max_len=48, mesh=mesh, seed=0,
+            policy="fcfs", audit=True, tiers=TierConfig(host_sessions=8),
+        )
+
+    eng = build()
+    rids1 = [eng.submit(p, 3, session_id=i) for i, p in enumerate(prompts)]
+    fid = eng.submit(filler, 12)  # keeps the engine busy through the gain
+    sched = FaultSchedule((
+        FaultEvent(step=1, kind="device_loss", devices=2),
+        FaultEvent(step=6, kind="device_gain", devices=2),
+    ))
+    orch = ServingOrchestrator(eng, sched)
+    out1 = orch.run(clock=lambda: 0.0)
+    recs = orch.report.migrations
+    assert len(recs) == 2 and recs[1]["lost_devices"] == -2
+    assert recs[1]["n_slots"] == 3  # pool regrown to its base size
+    # both sessions finished on the shrunken mesh and their rows rode the
+    # grow migration in the host-side ledger
+    assert recs[1]["demoted_sessions"] == 2
+
+    # turn 2: wake both sessions on the regrown pool — resident rows page
+    # back in, no re-prefill
+    hist = {i: np.concatenate([prompts[i], out1[rids1[i]]]) for i in range(2)}
+    rids2 = {i: eng.submit(h, 3, session_id=i) for i, h in hist.items()}
+    out2 = eng.run(clock=lambda: 0.0)
+    assert eng.metrics.wakeups == 2 and eng.metrics.cold_resumes == 0
+
+    # fault-free tiered reference over the same two turns
+    ref = build()
+    rref1 = [ref.submit(p, 3, session_id=i) for i, p in enumerate(prompts)]
+    rf = ref.submit(filler, 12)
+    ro1 = ref.run(clock=lambda: 0.0)
+    np.testing.assert_array_equal(out1[fid], ro1[rf])
+    for a, b in zip(rids1, rref1):
+        np.testing.assert_array_equal(out1[a], ro1[b])
+    rref2 = {i: ref.submit(h, 3, session_id=i) for i, h in hist.items()}
+    ro2 = ref.run(clock=lambda: 0.0)
+    for i in hist:
+        np.testing.assert_array_equal(out2[rids2[i]], ro2[rref2[i]])
+
+
+def test_priced_drain_tolerates_cheap_straggler(tiny):
+    """Satellite: a straggler whose remaining slowdown is worth less than
+    migrating the live KV rows is tolerated — no migration, the run eats
+    the (tiny) slowdown instead.  Turning pricing off restores the
+    always-drain behaviour on the identical schedule."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 virtual devices")
+    model, params = tiny
+    prompts, budgets = _workload(model, seed=14, n=5)
+    sched = FaultSchedule((
+        FaultEvent(step=1, kind="straggler", slowdown=1e-9, duration=10,
+                   devices=1),
+    ))
+
+    def run(price: bool):
+        eng = _engine(model, params, mesh=_mesh(4), n_slots=3, seed=2)
+        orch = ServingOrchestrator(
+            eng, sched,
+            ServingOrchestratorConfig(
+                straggler_patience=2,
+                autoscale=AutoscaleConfig(price_drains=price)),
+        )
+        rids = [eng.submit(p, b) for p, b in zip(prompts, budgets)]
+        out = orch.run(clock=lambda: 0.0)
+        assert len(out) == len(rids)
+        _assert_invariants(eng, out)
+        return orch.report
+
+    priced = run(price=True)
+    assert priced.migrations == [] and priced.drains == []
+    assert len(priced.drains_tolerated) == 1
+    tol = priced.drains_tolerated[0]
+    assert tol["cost_s"] > tol["remaining_slow_s"]
+    # pricing off: the same straggler is drained as before
+    unpriced = run(price=False)
+    assert len(unpriced.drains) == 1 and unpriced.drains_tolerated == []
+
+
+def test_autoscale_controller_sheds_backlog_with_hysteresis(tiny):
+    """Satellite: the shared controller walks STEADY -> PRESSURE -> SHED on
+    sustained queue pressure, sheds the tail down to shed_depth, relaxes
+    back to STEADY as the backlog drains — and goodput never counts the
+    shed tokens."""
+    model, params = tiny
+    eng = _engine(model, params, n_slots=1, max_len=32)
+    prompts, _ = _workload(model, seed=15, n=12)
+    rids = [eng.submit(p, 2) for p in prompts]
+    orch = ServingOrchestrator(
+        eng, FaultSchedule(),
+        ServingOrchestratorConfig(autoscale=AutoscaleConfig(
+            shed_depth=4, resume_depth=2, pressure_patience=2)),
+    )
+    out = orch.run(clock=lambda: 0.0)
+    rep = orch.report
+    assert rep.shed > 0
+    assert len(out) == len(rids) - rep.shed  # survivors all complete
+    assert rep.tokens == sum(len(v) for v in out.values())  # shed excluded
+    moves = [(a, b) for _, a, b, _ in rep.controller_transitions]
+    assert moves[:2] == [("STEADY", "PRESSURE"), ("PRESSURE", "SHED")]
+    assert moves[-1] == ("SHED", "STEADY")  # hysteresis released
+    assert eng.metrics.rejected == rep.shed
+    _assert_invariants(eng, out)
+
+
 class _VirtualClock:
     """Discrete-event clock for the soak: each call advances `dt`, so
     open-loop arrivals spread deterministically over the run."""
@@ -472,7 +652,9 @@ def test_soak_open_loop_poisson_with_repeated_faults(tiny):
     arrivals = np.cumsum(rng.exponential(1 / 50.0, n))
     sched = FaultSchedule((
         FaultEvent(step=25, kind="device_loss", devices=1),
-        FaultEvent(step=60, kind="straggler", slowdown=0.0, duration=20, devices=1),
+        # nonzero slowdown: a free straggler would now be *tolerated* by the
+        # priced-drain policy instead of drained — the soak wants the drain
+        FaultEvent(step=60, kind="straggler", slowdown=0.01, duration=20, devices=1),
         FaultEvent(step=90, kind="link_degraded", bandwidth_factor=0.25),
         FaultEvent(step=120, kind="device_loss", devices=1),
     ))
@@ -492,4 +674,57 @@ def test_soak_open_loop_poisson_with_repeated_faults(tiny):
     for r, b in zip(rids, budgets):
         assert len(out[r]) == b  # ...and nothing truncated or duplicated
     assert rep.tokens == sum(budgets)
+    _assert_invariants(eng, out)
+
+
+@pytest.mark.slow
+def test_soak_diurnal_load_with_loss_gain_cycle(tiny):
+    """Diurnal soak (make verify-slow): a quiet -> burst -> quiet arrival
+    wave over a rolling device_loss -> device_gain fault keeps the closed
+    loop healthy — the controller sheds the burst's tail instead of
+    building an unbounded backlog, the gain regrows the mesh and pool to
+    their base size, every surviving request completes with its full
+    budget, and goodput never counts a shed token."""
+    if len(jax.devices()) < 4:
+        pytest.skip("needs 4 virtual devices")
+    model, params = tiny
+    rng = np.random.default_rng(1)
+    n_quiet, n_burst = 8, 32
+    n = 2 * n_quiet + n_burst
+    prompts, budgets = _workload(model, seed=16, n=n, lo=4, hi=10,
+                                 blo=6, bhi=12)
+    # diurnal arrivals: spread, then a tight burst, then spread again
+    arrivals = np.concatenate([
+        0.02 * np.arange(n_quiet),
+        0.16 + 0.0005 * np.arange(n_burst),
+        0.20 + 0.02 * np.arange(n_quiet),
+    ])
+    sched = FaultSchedule((
+        FaultEvent(step=6, kind="device_loss", devices=1),
+        FaultEvent(step=20, kind="device_gain", devices=1),
+    ))
+    eng = _engine(model, params, mesh=_mesh(4), n_slots=4, max_len=40, seed=4)
+    orch = ServingOrchestrator(
+        eng, sched,
+        ServingOrchestratorConfig(autoscale=AutoscaleConfig(
+            shed_depth=6, resume_depth=2, pressure_patience=2)),
+    )
+    rids = [
+        eng.submit(p, b, temperature=0.3, arrival_time=float(t))
+        for p, b, t in zip(prompts, budgets, arrivals)
+    ]
+    out = orch.run(clock=_VirtualClock())
+    rep = orch.report
+    assert rep.shed > 0, "the burst must trip the shed loop"
+    assert len(out) == n - rep.shed  # survivors conserved, shed turned away
+    for r, b in zip(rids, budgets):
+        if r in out:
+            assert len(out[r]) == b
+    assert rep.tokens == sum(len(v) for v in out.values())
+    recs = rep.migrations
+    assert [m["lost_devices"] for m in recs] == [1, -1]
+    assert recs[1]["n_slots"] == 4  # pool back at base after the gain
+    assert "data=4" in recs[1]["mesh"]
+    assert any(b == "SHED" for _, _, b, _ in rep.controller_transitions)
+    assert len(eng.queue) == 0  # backlog fully drained or shed
     _assert_invariants(eng, out)
