@@ -3,7 +3,10 @@
 * §Roofline — from the dry-run artifacts (unchanged behaviour);
 * §Simulator — scenario matrix, fault-degradation curve, and all-to-all
   flooding results from ``benchmarks/results/bench_results.json`` (written
-  by ``python -m benchmarks.run``).
+  by ``python -m benchmarks.run``);
+* §Cost-model calibration — predicted-vs-observed decision costs from
+  ``benchmarks/results/BENCH_calibration.json`` (written by ``make
+  trace-demo``; semantics in docs/OBSERVABILITY.md).
 
 It also syncs every ``benchmarks/results/BENCH_*.json`` artifact to a
 repo-root copy (``sync_bench_artifacts``) so the bench trajectory
@@ -30,6 +33,8 @@ BEGIN = "<!-- AUTO-ROOFLINE-BEGIN -->"
 END = "<!-- AUTO-ROOFLINE-END -->"
 SIM_BEGIN = "<!-- AUTO-SIM-BEGIN -->"
 SIM_END = "<!-- AUTO-SIM-END -->"
+CAL_BEGIN = "<!-- AUTO-CAL-BEGIN -->"
+CAL_END = "<!-- AUTO-CAL-END -->"
 
 SKELETON = f"""# Experiments
 
@@ -37,6 +42,11 @@ SKELETON = f"""# Experiments
 
 {SIM_BEGIN}
 {SIM_END}
+
+## Cost-model calibration
+
+{CAL_BEGIN}
+{CAL_END}
 
 ## Dry-run / Roofline
 
@@ -128,11 +138,58 @@ def build_simulator(results_path: str = "benchmarks/results/bench_results.json")
     return "\n".join(lines)
 
 
+def build_calibration(
+    cal_path: str = "benchmarks/results/BENCH_calibration.json",
+) -> str:
+    """Fold the cost-model calibration records (written by ``make
+    trace-demo``) into a per-kind table: ratio (geomean observed/predicted),
+    bias (mean log10 of that ratio), and decision flips — see
+    docs/OBSERVABILITY.md for the semantics."""
+    if not os.path.exists(cal_path):
+        return ("\n(no calibration artifact — run `make trace-demo` to record "
+                "predicted-vs-observed costs)\n")
+    with open(cal_path) as f:
+        payload = json.load(f)
+    from repro.obs.calibration import summarize_records
+
+    summary = summarize_records(payload.get("records", []))
+    if not summary:
+        return "\n(calibration artifact holds no records)\n"
+    rows = []
+    for kind in sorted(summary):
+        s = summary[kind]
+        rows.append({
+            "kind": kind,
+            "n": s["n"],
+            "observed": s["n_observed"],
+            "ratio (obs/pred)": ("" if s["ratio"] is None
+                                 else f"{s['ratio']:.3g}"),
+            "bias (log10)": ("" if s["bias_log10"] is None
+                             else f"{s['bias_log10']:+.2f}"),
+            "decisions": s["decisions"],
+            "flips": s["flips"],
+        })
+    prov = payload.get("provenance", {})
+    stamp = (f" (recorded at {prov['timestamp_utc']}, {prov['git_sha'][:12]})"
+             if prov.get("timestamp_utc") and prov.get("git_sha") else "")
+    return "\n".join([
+        f"\nPredicted-vs-observed seconds for every cost-model-gated "
+        f"decision{stamp}.  Predictions model paper-scale hardware while "
+        f"observations come from the CPU-hosted harness, so ratios far from "
+        f"1.0 are expected — track the bias trend and the flip count "
+        f"(docs/OBSERVABILITY.md).\n",
+        _markdown_table(rows),
+        "",
+    ])
+
+
 def sync_bench_artifacts(results_dir: str = "benchmarks/results",
                          dest_dir: str = ".") -> list[str]:
     """Copy every ``BENCH_*.json`` from ``results_dir`` to ``dest_dir``
     (repo root by default) so top-level bench artifacts track the latest
-    runs.  Returns the destination paths written."""
+    runs.  Object-shaped artifacts missing a ``provenance`` stamp
+    (docs/OBSERVABILITY.md) are backfilled in the synced copy — readers
+    treat the key as opaque.  Returns the destination paths written."""
     import glob
     import shutil
 
@@ -141,7 +198,21 @@ def sync_bench_artifacts(results_dir: str = "benchmarks/results",
         dst = os.path.join(dest_dir, os.path.basename(src))
         if os.path.abspath(src) == os.path.abspath(dst):
             continue  # results dir IS the dest (e.g. a tmp outdir) — nothing to sync
-        shutil.copyfile(src, dst)
+        stamped = False
+        try:
+            with open(src) as f:
+                payload = json.load(f)
+            if isinstance(payload, dict) and "provenance" not in payload:
+                from repro.obs import provenance
+
+                payload["provenance"] = provenance()
+                with open(dst, "w") as f:
+                    json.dump(payload, f, indent=1, default=str)
+                stamped = True
+        except (ValueError, OSError):
+            pass  # unparseable artifact: fall through to the plain copy
+        if not stamped:
+            shutil.copyfile(src, dst)
         written.append(dst)
     return written
 
@@ -161,6 +232,9 @@ def main(path: str = "EXPERIMENTS.md",
             f.write(SKELETON)
     text = open(path).read()
     text = _splice(text, SIM_BEGIN, SIM_END, build_simulator(results_path))
+    cal_path = os.path.join(os.path.dirname(results_path) or "benchmarks/results",
+                            "BENCH_calibration.json")
+    text = _splice(text, CAL_BEGIN, CAL_END, build_calibration(cal_path))
     try:
         text = _splice(text, BEGIN, END, build_roofline())
     except Exception as e:  # noqa: BLE001 - roofline artifacts are optional

@@ -18,6 +18,8 @@ import time
 sys.path.insert(0, "src")
 sys.path.insert(0, ".")
 
+from repro.obs import log, provenance  # noqa: E402
+
 
 def _emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
@@ -56,6 +58,7 @@ def main(argv: list | None = None) -> dict:
             mode=args.paper_mode, torus_k=args.paper_torus_k,
             torus_msgs=args.paper_torus_msgs, chunk_size=args.paper_chunk,
         )
+        res["provenance"] = provenance()
         out_path = os.path.join(args.out, "BENCH_sim.json")
         with open(out_path, "w") as f:
             json.dump(res, f, indent=1, default=str)
@@ -73,8 +76,7 @@ def main(argv: list | None = None) -> dict:
             f"avg_hops={res['torus']['avg_hops']};"
             f"max_link_load={res['torus']['max_link_load']}",
         )
-        print(f"  peak_rss_mb={res['peak_rss_mb']} total={res['wall_s_total']}s",
-              file=sys.stderr)
+        log.info(f"  peak_rss_mb={res['peak_rss_mb']} total={res['wall_s_total']}s")
         if os.path.abspath(args.out) == os.path.abspath("benchmarks/results"):
             from benchmarks.make_report import sync_bench_artifacts
 
@@ -102,7 +104,7 @@ def main(argv: list | None = None) -> dict:
         for row in res["rows"]:
             paper = row.pop("paper", None)
             suffix = f" paper={paper}" if paper else ""
-            print(f"  lvl{row['lvl']}: {row}{suffix}", file=sys.stderr)
+            log.debug(f"  lvl{row['lvl']}: {row}{suffix}")
 
     # Sec. II-C all-to-all comparison
     topo = CLEXTopology(32, 4) if args.full else CLEXTopology(8, 3)
@@ -181,7 +183,7 @@ def main(argv: list | None = None) -> dict:
             f"clex_rds={r['clex_sum_avg_rds']};torus_rds={r['torus_avg_rds']};"
             f"gain={r['rounds_gain_vs_torus']}",
         )
-        print(f"  {r}", file=sys.stderr)
+        log.debug(f"  {r}")
 
     # fault injection: delivery + degradation curve (inherent fault-tolerance)
     t0 = time.time()
@@ -196,7 +198,7 @@ def main(argv: list | None = None) -> dict:
             f"delivered={r['delivered_fraction']};detours={r['detours']};"
             f"slowdown={r['slowdown_vs_fault_free']}",
         )
-        print(f"  {r}", file=sys.stderr)
+        log.debug(f"  {r}")
 
     # Sec. II-C all-to-all flooding vs the analytic bound
     t0 = time.time()
@@ -226,7 +228,7 @@ def main(argv: list | None = None) -> dict:
                 f"{worst['roofline_fraction']:.3f}",
             )
     except Exception as e:  # noqa: BLE001
-        print(f"roofline summary unavailable: {e}", file=sys.stderr)
+        log.warn(f"roofline summary unavailable: {e}")
 
     with open(os.path.join(args.out, "bench_results.json"), "w") as f:
         json.dump(results, f, indent=1, default=str)

@@ -58,6 +58,8 @@ sys.path.insert(0, ".")
 
 import numpy as np
 
+from repro.obs import log, provenance  # noqa: E402
+
 
 def _percentile(xs, p):
     return float(np.percentile(np.asarray(xs, np.float64), p)) if len(xs) else 0.0
@@ -346,7 +348,7 @@ def _run_tiered(model, params, args, vocab, rng):
         ),
     }
     mig = row["migration_extract"]
-    print(
+    log.info(
         f"tiered: {resident} resident sessions on {slots} slots "
         f"(x{row['resident_sessions']['ratio']:.1f}); turn-2 TTFT p50 "
         f"host {host_p50 * 1e3:.1f}ms / pooled {pooled_p50 * 1e3:.1f}ms vs "
@@ -518,7 +520,7 @@ def _run_diurnal(model, params, args, vocab, rng):
             if closed["latency_p99_virtual_s"] else 0.0
         ),
     }
-    print(
+    log.info(
         f"diurnal: closed-loop {closed['post_gain_tokens_per_step']:.2f} "
         f"tok/step after the gain ({closed['shed']} shed, "
         f"{len(closed['migrations'])} migrations) vs shrink-only "
@@ -785,7 +787,7 @@ def _run_faulted_scenarios(model, params, prompts, budgets, args, max_len,
                 if orch["latency_p99_s"] else 0.0
             ),
         }
-        print(
+        log.info(
             f"faulted/{name}: orchestrated {orch['goodput_tokens_per_s']:.1f} "
             f"tok/s p99 {orch['latency_p99_s']:.2f}s vs restart "
             f"{base['goodput_tokens_per_s']:.1f} tok/s p99 "
@@ -946,6 +948,7 @@ def main(argv=None) -> dict:
             ),
         }
 
+    results["provenance"] = provenance()
     os.makedirs(args.out, exist_ok=True)
     out_path = os.path.join(args.out, "BENCH_serving.json")
     with open(out_path, "w") as f:
@@ -954,7 +957,7 @@ def main(argv=None) -> dict:
         if wl not in results:
             continue
         row = results[wl]
-        print(
+        log.info(
             f"{wl}: continuous {row['continuous']['tokens_per_s']:.1f} tok/s "
             f"(util {row['continuous']['slot_utilization']:.2f}, "
             f"p99 {row['continuous']['latency_p99_s']:.2f}s) vs one-shot "
@@ -963,7 +966,7 @@ def main(argv=None) -> dict:
             f"p99 {row['one_shot']['latency_p99_s']:.2f}s) — "
             f"speedup {row['speedup_tokens_per_s']:.2f}x"
         )
-    print(f"wrote {out_path}")
+    log.info(f"wrote {out_path}")
     # sync the repo-root copy only for full-scale complete runs: a --tiny or
     # single-section (--fault-only / --tiered-only) smoke must never
     # overwrite the committed default-scale artifact with partial rows

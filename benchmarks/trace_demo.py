@@ -1,0 +1,191 @@
+"""Observability demo: tiny faulted runs of both orchestrators with
+tracing + calibration on (docs/OBSERVABILITY.md).
+
+  python -m benchmarks.trace_demo          # or: make trace-demo
+
+Runs, in-process:
+
+* a faulted orchestrated *training* run on a 2x2x2 pod mesh — link
+  degradation (grad-sync tier pricing), a pod loss (remesh migration),
+  and a drained straggler;
+* a faulted tiered *serving* run — sessions demote into the host tier
+  (tier-transfer pricing), wake up on turn 2 (wakeup-vs-cold-prefill
+  pricing), and a straggler drain migrates the live pool.
+
+Artifacts (under ``--out``, default ``benchmarks/results``):
+
+* ``traces/train_trace.json`` / ``traces/serve_trace.json`` —
+  Chrome/Perfetto ``trace_event`` JSON (plus lossless ``.jsonl`` twins);
+* ``BENCH_calibration.json`` — every predicted-vs-observed cost-model
+  decision from both runs (records + per-kind summary + provenance).
+
+When writing to the default results dir it also re-renders the
+EXPERIMENTS.md calibration table via ``benchmarks.make_report``.
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+import numpy as np
+
+from repro.obs import Obs, log, provenance
+from repro.obs.calibration import summarize_records
+
+
+def _tiny_model():
+    from repro.configs.base import get_config
+    from repro.models import build_model
+
+    cfg = get_config("internlm2-1.8b", reduced=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32", remat=False,
+                              n_layers=2)
+    return build_model(cfg)
+
+
+def run_training(ob: Obs) -> dict:
+    """Faulted orchestrated training: link degradation, pod loss, drained
+    straggler — covers the grad_sync / migration / drain calibration kinds."""
+    from repro.configs.base import ParallelConfig
+    from repro.data.pipeline import SyntheticLM
+    from repro.launch.jax_compat import make_mesh
+    from repro.optim.adamw import AdamWConfig
+    from repro.runtime.orchestrator import (
+        FaultEvent,
+        FaultSchedule,
+        Orchestrator,
+        OrchestratorConfig,
+    )
+    from repro.runtime.trainer import Trainer
+
+    model = _tiny_model()
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    opt_cfg = AdamWConfig(lr=1e-3, total_steps=12)
+    pcfg = ParallelConfig(hierarchical_grad_sync=True)
+    sched = FaultSchedule((
+        FaultEvent(step=1, kind="link_degraded", bandwidth_factor=0.1),
+        FaultEvent(step=3, kind="link_restored"),
+        FaultEvent(step=5, kind="pod_loss", devices=1),
+        FaultEvent(step=7, kind="straggler", slowdown=0.15, duration=8,
+                   devices=2),
+    ))
+    orch = Orchestrator(
+        model, opt_cfg, pcfg, mesh=mesh, schedule=sched,
+        cfg=OrchestratorConfig(drain_stragglers=True, straggler_patience=2),
+        obs=ob,
+    )
+    trainer = Trainer(model, opt_cfg, pcfg, mesh=mesh)
+    params, opt = trainer.init(jax.random.PRNGKey(0))
+    pipe = SyntheticLM(vocab=model.cfg.vocab, seq_len=16, global_batch=8)
+    _, _, report = orch.run(params, opt, pipe, n_steps=12)
+    log.info(
+        f"trace-demo train: {report.useful_steps} steps, "
+        f"{len(report.remesh_events)} remesh, "
+        f"{len(report.sync_switches)} sync decisions, "
+        f"{len(report.straggler_drains)} drains, final {report.final_state}"
+    )
+    return report.to_json()
+
+
+def run_serving(ob: Obs) -> dict:
+    """Faulted tiered serving: two session turns (demote -> wakeup) plus a
+    straggler drain — covers the cold_prefill / tier_transfer / wakeup /
+    migration / drain calibration kinds."""
+    from repro.launch.jax_compat import make_mesh
+    from repro.runtime.orchestrator import FaultEvent, FaultSchedule
+    from repro.runtime.serving import ContinuousBatchingEngine, TierConfig
+    from repro.runtime.serving_elastic import (
+        ServingOrchestrator,
+        ServingOrchestratorConfig,
+    )
+    from repro.runtime.sharding import reshard_params
+
+    model = _tiny_model()
+    params = model.init(jax.random.PRNGKey(1))
+    mesh = make_mesh((4, 1), ("data", "model"), devices=jax.devices()[:4])
+    params = reshard_params(model.param_axes(), params, mesh)
+    engine = ContinuousBatchingEngine(
+        model, params, n_slots=3, max_len=48, mesh=mesh, seed=0,
+        policy="fcfs", tiers=TierConfig(host_sessions=8), obs=ob,
+    )
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, model.cfg.vocab, (int(l),)).astype(np.int32)
+               for l in rng.integers(4, 9, 4)]
+    rids = [engine.submit(p, 4, session_id=i) for i, p in enumerate(prompts)]
+    sched = FaultSchedule((
+        FaultEvent(step=2, kind="straggler", slowdown=0.05, duration=8,
+                   devices=1),
+    ))
+    orch = ServingOrchestrator(engine, sched,
+                               ServingOrchestratorConfig(straggler_patience=2))
+    out = orch.run()
+    # turn 2: wake the demoted sessions — resident rows page back in
+    hist = {i: np.concatenate([prompts[i], out[rids[i]]])
+            for i in range(len(rids)) if rids[i] in out}
+    for i, h in hist.items():
+        engine.submit(h, 3, session_id=i)
+    engine.run()
+    engine.absorb_pool_metrics()
+    report = orch.report
+    log.info(
+        f"trace-demo serve: {report.tokens} tokens, "
+        f"{len(report.migrations)} migrations, {len(report.drains)} drains, "
+        f"{engine.metrics.wakeups} wakeups, final {report.final_state}"
+    )
+    return report.to_json()
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/results",
+                    help="artifact directory (traces/ goes under it)")
+    args = ap.parse_args(argv)
+
+    trace_dir = os.path.join(args.out, "traces")
+    os.makedirs(trace_dir, exist_ok=True)
+
+    ob_train = Obs()
+    train_summary = run_training(ob_train)
+    ob_train.tracer.export_chrome(os.path.join(trace_dir, "train_trace.json"))
+    ob_train.tracer.export_jsonl(os.path.join(trace_dir, "train_trace.jsonl"))
+
+    ob_serve = Obs()
+    serve_summary = run_serving(ob_serve)
+    ob_serve.tracer.export_chrome(os.path.join(trace_dir, "serve_trace.json"))
+    ob_serve.tracer.export_jsonl(os.path.join(trace_dir, "serve_trace.jsonl"))
+
+    records = [r.to_json() for r in ob_train.calibration.records]
+    records += [r.to_json() for r in ob_serve.calibration.records]
+    payload = {
+        "records": records,
+        "summary": summarize_records(records),
+        "train": train_summary,
+        "serve": serve_summary,
+        "provenance": provenance(),
+    }
+    cal_path = os.path.join(args.out, "BENCH_calibration.json")
+    with open(cal_path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    log.info(f"wrote {cal_path} ({len(records)} records, "
+             f"kinds: {sorted(payload['summary'])})")
+
+    if os.path.abspath(args.out) == os.path.abspath("benchmarks/results"):
+        from benchmarks.make_report import main as report_main
+
+        report_main()
+    return payload
+
+
+if __name__ == "__main__":
+    main()

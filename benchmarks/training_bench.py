@@ -46,6 +46,8 @@ sys.path.insert(0, ".")
 import jax
 import jax.numpy as jnp
 
+from repro.obs import log, provenance  # noqa: E402
+
 
 def _build(arch: str, tiny: bool):
     from repro.configs.base import get_config
@@ -302,18 +304,18 @@ def main(argv=None):
             ),
         }
         results["scenarios"][name] = row
-        print(
+        log.info(
             f"{name}: orchestrated {orch_stats['goodput_steps_per_s']:.3f} steps/s "
             f"vs baseline {base_stats['goodput_steps_per_s']:.3f} "
             f"(x{row['goodput_ratio']:.2f}; baseline wasted "
-            f"{base_stats['wasted_steps']} steps, {base_stats['restores']} restores)",
-            flush=True,
+            f"{base_stats['wasted_steps']} steps, {base_stats['restores']} restores)"
         )
 
+    results["provenance"] = provenance()
     out_path = os.path.join(args.out, "BENCH_training.json")
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2)
-    print(f"wrote {out_path}")
+    log.info(f"wrote {out_path}")
     if os.path.abspath(args.out) == os.path.abspath("benchmarks/results"):
         from benchmarks.make_report import sync_bench_artifacts
 

@@ -30,6 +30,7 @@ from typing import Callable
 
 import numpy as np
 
+from ..obs import NULL_SPAN, get_obs
 from .analysis import all_to_all_comparison
 from .routing import flood_route
 from .sim_engine import get_engine
@@ -259,44 +260,50 @@ def scenario_matrix(
     one), and the torus DOR baseline.  With ``engine='streaming'`` the
     torus columns switch to the exact-hops / completion-lower-bound form
     (no realised queueing schedule at paper scale)."""
+    obs = get_obs()
     rows = []
     for name in scenarios or list(SCENARIOS):
         sc = SCENARIOS[name]
-        plain = run_clex_scenario(clex, sc, msgs_per_node, mode, seed,
-                                  valiant=False, faults=faults, engine=engine)
-        row = {
-            "scenario": name,
-            "n_messages": plain.n_messages,
-            "clex_sum_avg_rds": round(plain.sum_avg_rounds, 2),
-            "clex_sum_avg_hops": round(plain.sum_avg_hops, 2),
-            "clex_max_rds_l1": plain.levels[1].max_rounds,
-            "clex_max_load_l1": round(plain.levels[1].max_avg_load, 2),
-        }
-        if sc.valiant_level is not None:
-            val = run_clex_scenario(clex, sc, msgs_per_node, mode, seed,
-                                    valiant="auto", faults=faults, engine=engine)
-            row.update({
-                "clex_valiant_sum_avg_rds": round(val.sum_avg_rounds, 2),
-                "clex_valiant_max_rds_l1": val.levels[1].max_rounds,
-                "clex_valiant_max_load_l1": round(val.levels[1].max_avg_load, 2),
-            })
-        tor = run_torus_scenario(torus, sc, msgs_per_node, seed, engine=engine)
-        if isinstance(tor, TorusSimResult):
-            row.update({
-                "torus_avg_rds": round(tor.avg_rounds, 2),
-                "torus_max_rds": tor.max_rounds,
-                "torus_congestion": round(tor.congestion_overhead, 2),
-                "rounds_gain_vs_torus": round(
-                    tor.avg_rounds / max(plain.sum_avg_rounds, 1e-9), 2),
-            })
-        else:
-            row.update({
-                "torus_avg_hops": round(tor.avg_hops, 2),
-                "torus_max_link_load": tor.max_link_load,
-                "torus_rounds_lb": tor.completion_rounds_lb,
-                "rounds_gain_vs_torus_lb": round(
-                    tor.completion_rounds_lb / max(plain.sum_avg_rounds, 1e-9), 2),
-            })
+        span = (obs.tracer.span("scenario", "sim", scenario=name,
+                                topo=f"L{clex.L}/{clex.n}")
+                if obs.enabled else NULL_SPAN)
+        with span:
+            plain = run_clex_scenario(clex, sc, msgs_per_node, mode, seed,
+                                      valiant=False, faults=faults, engine=engine)
+            row = {
+                "scenario": name,
+                "n_messages": plain.n_messages,
+                "clex_sum_avg_rds": round(plain.sum_avg_rounds, 2),
+                "clex_sum_avg_hops": round(plain.sum_avg_hops, 2),
+                "clex_max_rds_l1": plain.levels[1].max_rounds,
+                "clex_max_load_l1": round(plain.levels[1].max_avg_load, 2),
+            }
+            if sc.valiant_level is not None:
+                val = run_clex_scenario(clex, sc, msgs_per_node, mode, seed,
+                                        valiant="auto", faults=faults, engine=engine)
+                row.update({
+                    "clex_valiant_sum_avg_rds": round(val.sum_avg_rounds, 2),
+                    "clex_valiant_max_rds_l1": val.levels[1].max_rounds,
+                    "clex_valiant_max_load_l1": round(val.levels[1].max_avg_load, 2),
+                })
+            tor = run_torus_scenario(torus, sc, msgs_per_node, seed, engine=engine)
+            if isinstance(tor, TorusSimResult):
+                row.update({
+                    "torus_avg_rds": round(tor.avg_rounds, 2),
+                    "torus_max_rds": tor.max_rounds,
+                    "torus_congestion": round(tor.congestion_overhead, 2),
+                    "rounds_gain_vs_torus": round(
+                        tor.avg_rounds / max(plain.sum_avg_rounds, 1e-9), 2),
+                })
+            else:
+                row.update({
+                    "torus_avg_hops": round(tor.avg_hops, 2),
+                    "torus_max_link_load": tor.max_link_load,
+                    "torus_rounds_lb": tor.completion_rounds_lb,
+                    "rounds_gain_vs_torus_lb": round(
+                        tor.completion_rounds_lb / max(plain.sum_avg_rounds, 1e-9), 2),
+                })
+            span.set(n_messages=plain.n_messages)
         rows.append(row)
     return rows
 

@@ -46,6 +46,7 @@ import time
 
 import numpy as np
 
+from ..obs import get_obs
 from .routing import (
     UnroutableError,
     bundle_edge_targets,
@@ -64,6 +65,18 @@ from .topology import CLEXTopology, FaultSet, copy_index
 __all__ = ["DEFAULT_CHUNK", "simulate_point_to_point_streaming"]
 
 DEFAULT_CHUNK = 1 << 20
+
+
+def _peak_rss_mb() -> float:
+    """Peak resident set size of this process in MiB (0.0 where the
+    ``resource`` module is unavailable, e.g. non-POSIX hosts)."""
+    try:
+        import resource
+
+        kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    except (ImportError, ValueError):
+        return 0.0
+    return round(kb / 1024.0, 1)
 
 
 # --------------------------------------------------------------- hashed RNG
@@ -575,6 +588,7 @@ def simulate_point_to_point_streaming(
     within = None
     if valiant_level is not None:
         within = None if valiant_level >= topo.L else valiant_level
+    obs = get_obs()
     for start in range(0, nmsg, chunk_size):
         stop = min(start + chunk_size, nmsg)
         gidx = np.arange(start, stop, dtype=np.int64)
@@ -587,6 +601,14 @@ def simulate_point_to_point_streaming(
             raise AssertionError(
                 "routing failed: some messages not delivered to their destination"
             )
+        if obs.enabled:
+            elapsed = time.time() - t0
+            rate = stop / elapsed if elapsed > 0 else 0.0
+            rss_mb = _peak_rss_mb()
+            obs.tracer.instant("sim_chunk", "sim", done=stop, total=nmsg,
+                               msgs_per_s=round(rate, 1), peak_rss_mb=rss_mb)
+            obs.registry.gauge("sim.stream.msgs_per_s").set(round(rate, 1))
+            obs.registry.gauge("sim.stream.peak_rss_mb").set(rss_mb)
     levels, phase_hist, edge_load = state.finalize(nmsg)
     return SimulationResult(
         topo=topo,

@@ -42,13 +42,16 @@ import time
 import jax
 import numpy as np
 
+from .. import obs as obslib
 from ..configs.base import ARCH_IDS, get_config
 from ..models import build_model
+from ..obs import log
 from ..runtime.orchestrator import load_schedule
 from ..runtime.serving import ContinuousBatchingEngine, ServingEngine
 from ..runtime.serving_elastic import ServingOrchestrator
 from ..runtime.sharding import reshard_params
 from .mesh import make_elastic_mesh, parse_mesh_flag
+from .train import finish_obs
 
 
 def main() -> None:
@@ -96,7 +99,19 @@ def main() -> None:
     ap.add_argument("--no-price-drains", action="store_true",
                     help="always drain stragglers instead of pricing the "
                          "migration against the remaining slowdown")
+    ap.add_argument("--trace", type=str, default="",
+                    help="write a Chrome/Perfetto trace_event JSON here "
+                         "(plus a .jsonl next to it) — docs/OBSERVABILITY.md")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the metrics registry and cost-model "
+                         "calibration summary after the run")
     args = ap.parse_args()
+
+    # --trace/--metrics install an enabled observability bundle process-wide
+    # before the engine is constructed; default stays NULL_OBS
+    ob = obslib.get_obs()
+    if args.trace or args.metrics:
+        ob = obslib.set_obs(obslib.Obs())
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
@@ -110,9 +125,10 @@ def main() -> None:
         out = engine.generate(prompts, args.new_tokens, temperature=args.temperature)
         dt = time.time() - t0
         toks = args.batch * args.new_tokens
-        print(f"generated {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. compile)")
+        log.info(f"generated {toks} tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. compile)")
         for row in out[: min(args.batch, 4)]:
-            print("  ", row.tolist())
+            log.debug(f"  {row.tolist()}")
+        finish_obs(ob, args.trace, args.metrics)
         return
 
     mesh = None
@@ -184,8 +200,8 @@ def main() -> None:
         dt = time.time() - t0
         report = orch.report
         for line in report.log:
-            print(line, flush=True)
-        print(
+            log.info(line)
+        log.info(
             f"orchestrated serving done: {report.tokens} tokens in "
             f"{report.wall_s:.2f}s (goodput {report.goodput():.1f} tok/s), "
             f"{len(report.migrations)} migrations ({len(report.drains)} "
@@ -218,18 +234,18 @@ def main() -> None:
         dt = time.time() - t0
 
     m = engine.metrics
-    print(
+    log.info(
         f"served {len(rids)} ragged requests / {toks} tokens in {dt:.2f}s "
         f"({toks/dt:.1f} tok/s incl. compile)"
     )
-    print(
+    log.info(
         f"slots={engine.pool.n_slots} policy={args.policy} decode_steps={m.decode_steps} "
         f"prefills={m.prefills} slot_utilization={m.slot_utilization:.2f} "
         f"pool_evictions={engine.pool.n_evict}"
     )
     if args.tiered:
         p = engine.pool
-        print(
+        log.info(
             f"tiers: resident_sessions={p.resident_sessions} "
             f"(host={len(p.host)} pooled={len(p.pooled)} dropped={len(p.dropped)}) "
             f"demotions={p.n_demote} wakeups={m.wakeups} "
@@ -237,7 +253,10 @@ def main() -> None:
             f"refills={p.n_refill} modeled_tier_s={p.modeled_tier_s:.4f}"
         )
     for r in [r for r in rids if r in out][:4]:
-        print("  ", out[r].tolist())
+        log.debug(f"  {out[r].tolist()}")
+    if ob.enabled:
+        engine.absorb_pool_metrics()
+    finish_obs(ob, args.trace, args.metrics)
 
 
 if __name__ == "__main__":

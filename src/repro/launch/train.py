@@ -23,14 +23,18 @@ over all visible devices.  Inject faults with --fault-schedule '<json>'
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
+from .. import obs as obslib
 from ..checkpoint.checkpointing import latest_intact_step, restore_checkpoint, save_checkpoint
 from ..configs.base import ARCH_IDS, ParallelConfig, get_config
 from ..data.pipeline import SyntheticLM
 from ..models import build_model
+from ..obs import log
 from ..optim.adamw import AdamWConfig
 from ..runtime.autoscale import AutoscaleConfig
 from ..runtime.fault_tolerance import StragglerMonitor
@@ -38,6 +42,19 @@ from ..runtime.orchestrator import Orchestrator, OrchestratorConfig, load_schedu
 from ..runtime.trainer import Trainer
 from .jax_compat import use_mesh
 from .mesh import make_elastic_mesh, parse_mesh_flag
+
+
+def finish_obs(ob, trace_path: str, want_metrics: bool) -> None:
+    """Shared launcher epilogue (docs/OBSERVABILITY.md): export the trace
+    (Chrome/Perfetto JSON at the given path, lossless JSONL next to it) and
+    dump the metrics registry + calibration summary to stdout."""
+    if trace_path:
+        chrome = ob.tracer.export_chrome(trace_path)
+        jsonl = ob.tracer.export_jsonl(os.path.splitext(trace_path)[0] + ".jsonl")
+        log.info(f"trace written: {chrome} (+ {jsonl})")
+    if want_metrics:
+        print(ob.registry.to_json())
+        print(json.dumps({"calibration": ob.calibration.summary()}, indent=2))
 
 
 def main() -> None:
@@ -72,7 +89,19 @@ def main() -> None:
     ap.add_argument("--spare-devices", type=int, default=0,
                     help="warm spares device_gain events may admit beyond "
                          "previously-lost chips")
+    ap.add_argument("--trace", type=str, default="",
+                    help="write a Chrome/Perfetto trace_event JSON here "
+                         "(plus a .jsonl next to it) — docs/OBSERVABILITY.md")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the metrics registry and cost-model "
+                         "calibration summary after the run")
     args = ap.parse_args()
+
+    # --trace/--metrics install an enabled observability bundle process-wide
+    # before any orchestrator/engine is constructed; default stays NULL_OBS
+    ob = obslib.get_obs()
+    if args.trace or args.metrics:
+        ob = obslib.set_obs(obslib.Obs())
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
@@ -93,7 +122,7 @@ def main() -> None:
     trainer = Trainer(model, opt_cfg, pcfg, mesh=mesh, microbatches=args.microbatches)
     params, opt = trainer.init(jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M devices={len(jax.devices())}")
+    log.info(f"arch={cfg.name} params={n_params/1e6:.1f}M devices={len(jax.devices())}")
 
     start = 0
     if args.resume and args.ckpt_dir:
@@ -102,7 +131,7 @@ def main() -> None:
             (params, opt), start = restore_checkpoint(args.ckpt_dir, (params, opt),
                                                       step=last)
             start += 1
-            print(f"resumed from step {start - 1}")
+            log.info(f"resumed from step {start - 1}")
 
     pipe = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
 
@@ -118,11 +147,12 @@ def main() -> None:
                 spare_devices=args.spare_devices,
             ),
             microbatches=args.microbatches,
+            obs=ob,
         )
         params, opt, report = orch.run(params, opt, pipe, args.steps, start_step=start)
         for line in report.log:
-            print(line, flush=True)
-        print(
+            log.info(line)
+        log.info(
             f"orchestrated run done: {report.useful_steps} useful steps in "
             f"{report.wall_s:.1f}s (goodput {report.goodput():.2f} steps/s), "
             f"{len(report.remesh_events)} remesh "
@@ -130,6 +160,7 @@ def main() -> None:
             f"{len(report.sync_switches)} sync decisions, {report.restores} "
             f"restores, final {report.final_state}"
         )
+        finish_obs(ob, args.trace, args.metrics)
         return
 
     step_fn = trainer.jitted_step(donate=False)
@@ -137,19 +168,23 @@ def main() -> None:
 
     with use_mesh(mesh):
         for step in range(start, args.steps):
+            if ob.enabled:
+                ob.tracer.step = step
             monitor.step_start()
             batch = {k: jnp.asarray(v) for k, v in pipe.global_batch_arrays(step).items()}
-            params, opt, metrics = step_fn(params, opt, batch)
-            straggler = monitor.step_end()
+            with ob.span("train_step", "train"):
+                params, opt, metrics = step_fn(params, opt, batch)
+                straggler = monitor.step_end()
             if step % args.log_every == 0 or step == args.steps - 1:
-                print(
+                log.info(
                     f"step {step:5d} loss {float(metrics['loss']):.4f} "
                     f"gnorm {float(metrics['grad_norm']):.3f} lr {float(metrics['lr']):.2e}"
-                    f"{' [straggler]' if straggler else ''}",
-                    flush=True,
+                    f"{' [straggler]' if straggler else ''}"
                 )
             if args.ckpt_dir and (step % args.ckpt_every == 0 or step == args.steps - 1):
-                save_checkpoint(args.ckpt_dir, step, (params, opt))
+                with ob.span("ckpt", "train"):
+                    save_checkpoint(args.ckpt_dir, step, (params, opt))
+    finish_obs(ob, args.trace, args.metrics)
 
 
 if __name__ == "__main__":

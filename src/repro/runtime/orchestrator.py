@@ -57,6 +57,8 @@ from ..configs.base import ParallelConfig
 from ..core.collectives import CollectiveCostModel, error_feedback_slots
 from ..launch import jax_compat
 from ..launch.mesh import make_elastic_mesh
+from ..obs import NULL_SPAN, get_obs
+from ..obs.metrics import MetricsRegistry, registry_field
 from ..optim.adamw import AdamWConfig
 from . import sharding as shd
 from .autoscale import AutoscaleConfig, AutoscaleController, tree_nbytes
@@ -383,29 +385,64 @@ class OrchestratorConfig:
     spare_pods: int = 0
 
 
-@dataclasses.dataclass
 class OrchestratorReport:
-    """What happened during a run — the goodput ledger."""
+    """What happened during a run — the goodput ledger.
 
-    useful_steps: int = 0
-    wall_s: float = 0.0
-    restores: int = 0  # stays 0 on the elastic happy path
-    remesh_events: list = dataclasses.field(default_factory=list)
-    sync_switches: list = dataclasses.field(default_factory=list)
-    straggler_steps: list = dataclasses.field(default_factory=list)
-    straggler_drains: list = dataclasses.field(default_factory=list)
-    drains_tolerated: list = dataclasses.field(default_factory=list)
-    injected_slow_s: float = 0.0  # straggler seconds actually eaten
-    slow_s_avoided: float = 0.0  # straggler seconds a drain cut short
-    mesh_history: list = dataclasses.field(default_factory=list)
-    log: list = dataclasses.field(default_factory=list)
-    final_state: str = "TRAINING"
+    A thin view over a :class:`~repro.obs.metrics.MetricsRegistry`
+    (docs/OBSERVABILITY.md): every scalar field is a property over the
+    ``train.*`` metric of the same name, so the registry and the legacy
+    report fields are one storage cell — ``--metrics`` dumps the registry,
+    and these fields stay bit-compatible for existing readers.
+    """
+
+    # scalar fields -> train.<name> registry counters (one storage cell)
+    _SCALARS = (
+        ("useful_steps", 0),
+        ("wall_s", 0.0),
+        ("restores", 0),  # stays 0 on the elastic happy path
+        ("injected_slow_s", 0.0),  # straggler seconds actually eaten
+        ("slow_s_avoided", 0.0),  # straggler seconds a drain cut short
+    )
+    _LISTS = (
+        "remesh_events", "sync_switches", "straggler_steps",
+        "straggler_drains", "drains_tolerated", "mesh_history", "log",
+    )
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = MetricsRegistry() if registry is None else registry
+        for name, default in self._SCALARS:
+            # reset, not just get-or-create: a fresh report means zeroed
+            # fields even when the registry is shared across runs
+            self.registry.counter(f"train.{name}", default).value = default
+        for name in self._LISTS:
+            setattr(self, name, [])
+        self.final_state = "TRAINING"
 
     def goodput(self) -> float:
         return self.useful_steps / self.wall_s if self.wall_s > 0 else 0.0
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        # same keys, same order as the pre-registry dataclass emitted
+        return {
+            "useful_steps": self.useful_steps,
+            "wall_s": self.wall_s,
+            "restores": self.restores,
+            "remesh_events": list(self.remesh_events),
+            "sync_switches": list(self.sync_switches),
+            "straggler_steps": list(self.straggler_steps),
+            "straggler_drains": list(self.straggler_drains),
+            "drains_tolerated": list(self.drains_tolerated),
+            "injected_slow_s": self.injected_slow_s,
+            "slow_s_avoided": self.slow_s_avoided,
+            "mesh_history": list(self.mesh_history),
+            "log": list(self.log),
+            "final_state": self.final_state,
+        }
+
+
+for _name, _default in OrchestratorReport._SCALARS:
+    setattr(OrchestratorReport, _name, registry_field(f"train.{_name}"))
+del _name, _default
 
 
 def reshard_to_mesh(model, params, opt_state, mesh):
@@ -445,8 +482,14 @@ class Orchestrator:
         schedule: FaultSchedule = FaultSchedule(),
         cfg: OrchestratorConfig = OrchestratorConfig(),
         microbatches: int = 1,
+        obs=None,
     ):
         self.model = model
+        # observability bundle (docs/OBSERVABILITY.md): NULL_OBS unless the
+        # launcher installed one — every hook below is a no-op behind a
+        # single `enabled` attribute check
+        self._obs = obs if obs is not None else get_obs()
+        self._pending_cal = None  # grad_sync record awaiting next-step wall
         self.opt_cfg = opt_cfg
         self.base_pcfg = pcfg
         self.pcfg = pcfg
@@ -544,19 +587,43 @@ class Orchestrator:
             prev_microbatches=self.microbatches,
         )
         new_mesh = make_elastic_mesh(plan.data_parallel * plan.model_parallel, mp)
+        obs = self._obs
+        state_bytes = 0
+        if obs.enabled:
+            state_bytes = tree_nbytes(params) + tree_nbytes(
+                {k: v for k, v in opt_state.items() if k != "step"}
+            )
+        span = (
+            obs.tracer.span("remesh", "train", kind=kind, survivors=survivors)
+            if obs.enabled else NULL_SPAN
+        )
         t0 = time.monotonic()
-        params, opt_state = reshard_to_mesh(self.model, params, opt_state, new_mesh)
-        self.mesh_ctx = jax_compat.MeshContext.from_any(new_mesh)
-        self.microbatches = plan.microbatches
-        self._avail = survivors
-        # a 2-D survivor mesh has no pod axis: degraded-sync tiering (and its
-        # err slots, dropped by the reshard) no longer applies there
-        if "pod" not in self.mesh_ctx.axis_names:
-            self.pcfg = dataclasses.replace(self.pcfg, compress_cross_pod=False)
-            if self.state == "DEGRADED_SYNC":
-                self.state = "TRAINING"
-        self._rebuild()
+        with span:
+            params, opt_state = reshard_to_mesh(
+                self.model, params, opt_state, new_mesh
+            )
+            self.mesh_ctx = jax_compat.MeshContext.from_any(new_mesh)
+            self.microbatches = plan.microbatches
+            self._avail = survivors
+            # a 2-D survivor mesh has no pod axis: degraded-sync tiering (and
+            # its err slots, dropped by the reshard) no longer applies there
+            if "pod" not in self.mesh_ctx.axis_names:
+                self.pcfg = dataclasses.replace(self.pcfg, compress_cross_pod=False)
+                if self.state == "DEGRADED_SYNC":
+                    self.state = "TRAINING"
+            self._rebuild()
         reshard_s = time.monotonic() - t0
+        if obs.enabled:
+            # calibration: the migration price the drain/remesh policy uses
+            # vs the reshard wall it actually took (docs/OBSERVABILITY.md)
+            obs.calibration.observe(
+                obs.calibration.record(
+                    "migration",
+                    self.cfg.cost_model.migration_cost(state_bytes),
+                    step=step, note=kind,
+                ),
+                reshard_s,
+            )
         rec = {
             "step": step, "kind": kind, "lost_devices": delta,
             "survivors": survivors, "mesh": self._mesh_shape(),
@@ -611,6 +678,22 @@ class Orchestrator:
         else:
             decision["switched"] = False
         self.state = "DEGRADED_SYNC" if self.pcfg.compress_cross_pod else "TRAINING"
+        obs = self._obs
+        if obs.enabled:
+            obs.tracer.instant("sync_switch", "train", tier=decision["tier"],
+                               event=ev.kind, switched=decision["switched"])
+            if "t_plain_s" in decision:
+                # calibration: chosen-tier predicted cost vs the other tier;
+                # observed closes with the *next step's* wall time (an
+                # inclusive upper bound on the sync — docs/OBSERVABILITY.md)
+                compressed = decision["tier"] == "compressed"
+                self._pending_cal = obs.calibration.record(
+                    "grad_sync",
+                    decision["t_compressed_s" if compressed else "t_plain_s"],
+                    alternative_s=decision["t_plain_s" if compressed
+                                           else "t_compressed_s"],
+                    chosen=decision["tier"], step=step, note=ev.kind,
+                )
         report.sync_switches.append(decision)
         report.log.append(
             f"step {step}: {ev.kind} (bw x{self.link_factor:g}) -> "
@@ -644,7 +727,8 @@ class Orchestrator:
                 "launcher builds one over all devices when --mesh is omitted)"
             )
         self._global_batch = pipe.global_batch
-        report = OrchestratorReport()
+        obs = self._obs
+        report = OrchestratorReport(registry=obs.registry if obs.enabled else None)
         report.mesh_history.append((start_step, self._mesh_shape()))
         monitor = StragglerMonitor()
         stragglers = StragglerLedger()
@@ -659,6 +743,8 @@ class Orchestrator:
         t0 = time.monotonic()
         try:
             for step in range(start_step, n_steps):
+                if obs.enabled:
+                    obs.tracer.step = step
                 for ev in self.schedule.at(step):
                     params, opt_state = self._apply_event(
                         ev, params, opt_state, report, step
@@ -669,9 +755,20 @@ class Orchestrator:
                     k: jnp.asarray(v) for k, v in pipe.global_batch_arrays(step).items()
                 }
                 monitor.step_start()
-                with jax_compat.use_mesh(self.mesh_ctx):
+                span = (
+                    obs.tracer.span("train_step", "train") if obs.enabled
+                    else NULL_SPAN
+                )
+                t_step0 = time.monotonic()
+                with span, jax_compat.use_mesh(self.mesh_ctx):
                     params, opt_state, metrics = self._step_fn(params, opt_state, batch)
-                jax.block_until_ready(metrics["loss"])
+                    jax.block_until_ready(metrics["loss"])
+                if self._pending_cal is not None:
+                    # close the grad_sync record with this step's wall time
+                    obs.calibration.observe(
+                        self._pending_cal, time.monotonic() - t_step0
+                    )
+                    self._pending_cal = None
                 slow = stragglers.tick()
                 if slow:
                     time.sleep(slow)  # injected straggler
@@ -693,6 +790,16 @@ class Orchestrator:
                         decision = controller.drain_decision(
                             nbytes, entry[0].slowdown, entry[1]
                         )
+                        if obs.enabled:
+                            # calibration: drain price vs remaining slowdown;
+                            # observed closes with the remesh wall when the
+                            # drain actually runs (tolerated drains never do)
+                            cal_rec = obs.calibration.record(
+                                "drain", decision["cost_s"],
+                                alternative_s=decision["remaining_slow_s"],
+                                chosen="drain" if decision["drain"] else "tolerate",
+                                step=step,
+                            )
                         if not decision["drain"]:
                             tolerated.add(id(entry))
                             report.drains_tolerated.append(
@@ -713,12 +820,16 @@ class Orchestrator:
                         rec["slow_s_avoided"] = avoided
                         report.straggler_drains.append(rec)
                         report.slow_s_avoided += avoided
+                        if obs.enabled:
+                            obs.calibration.observe(cal_rec, rec["reshard_s"])
                 report.useful_steps += 1
                 self._last_metrics = {k: float(v) for k, v in metrics.items()}
                 if ckpt and (step % self.cfg.ckpt_every == 0 or step == n_steps - 1):
-                    ckpt.save(
-                        self.cfg.ckpt_dir, step, (params, opt_state), keep=self.cfg.keep
-                    )
+                    with obs.span("ckpt", "train"):
+                        ckpt.save(
+                            self.cfg.ckpt_dir, step, (params, opt_state),
+                            keep=self.cfg.keep,
+                        )
         finally:
             if ckpt:
                 ckpt.close()

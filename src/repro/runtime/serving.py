@@ -50,6 +50,8 @@ import numpy as np
 
 from ..core.collectives import CollectiveCostModel
 from ..models import Model
+from ..obs import NULL_SPAN, get_obs
+from ..obs.metrics import MetricsRegistry, registry_field
 
 __all__ = [
     "Request",
@@ -478,10 +480,12 @@ class TieredKVPool(KVPool):
         capacity: int,
         tiers: TierConfig = TierConfig(),
         cost_model: Optional[CollectiveCostModel] = None,
+        obs=None,
     ):
         super().__init__(model, n_slots, capacity)
         self.tiers = tiers
         self.cost_model = cost_model or CollectiveCostModel()
+        self._obs = obs if obs is not None else get_obs()
         self.host: OrderedDict[int, SessionRecord] = OrderedDict()
         self.pooled: OrderedDict[int, SessionRecord] = OrderedDict()
         self.dropped: dict[int, SessionRecord] = {}
@@ -520,10 +524,24 @@ class TieredKVPool(KVPool):
     def demote(self, slot: int, rec: SessionRecord) -> SessionRecord:
         """Evict ``slot`` into the hierarchy: extract the row to host (wire
         format), free the slot, and spill LRU-first past the tier caps."""
+        obs = self._obs
+        t0 = time.monotonic()
         rec.row = self.extract(slot)
         rec.nbytes = int(
             sum(np.asarray(leaf).nbytes for leaf in jax.tree.leaves(rec.row))
         )
+        if obs.enabled:
+            # calibration: the hbm->host transfer price the hierarchy bills
+            # vs the extract wall it actually took
+            obs.calibration.observe(
+                obs.calibration.record(
+                    "tier_transfer",
+                    self.cost_model.tier_transfer_cost(rec.nbytes, "hbm", "host"),
+                    note="demote hbm->host",
+                ),
+                time.monotonic() - t0,
+            )
+            obs.tracer.instant("demote", "serve", sid=rec.sid, nbytes=rec.nbytes)
         self.free(slot)
         # a re-demoted session id supersedes any stale ledger entry
         self.host.pop(rec.sid, None)
@@ -778,27 +796,47 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-@dataclasses.dataclass
 class EngineMetrics:
-    steps: int = 0
-    decode_steps: int = 0
-    prefills: int = 0
-    active_slot_steps: int = 0
-    total_slot_steps: int = 0
-    predicted_a2a_s: float = 0.0
-    # tiered pooling (TieredKVPool engines only)
-    demotions: int = 0  # finished sessions parked in the hierarchy
-    wakeups: int = 0  # resumes served from a resident row (prefill skipped)
-    cold_resumes: int = 0  # resumes whose row was dropped (re-prefilled)
-    # admission-control shedding (docs/SERVING.md, autoscaling): shed work
-    # never allocates a KV slot and never counts toward goodput
-    rejected: int = 0  # refused at submit (queue over max_queue_depth)
-    deadline_drops: int = 0  # dropped unadmitted past their deadline
-    shed_tokens: int = 0  # token budget of all shed requests (not served)
+    """Engine counters as a thin view over a
+    :class:`~repro.obs.metrics.MetricsRegistry` (docs/OBSERVABILITY.md):
+    each field is a property over the ``serve.engine.*`` metric of the same
+    name, so the registry and the legacy fields are one storage cell.
+    Zero-arg construction builds a private registry (the serving bench
+    resets metrics with ``type(engine.metrics)()``)."""
+
+    _SCALARS = (
+        ("steps", 0),
+        ("decode_steps", 0),
+        ("prefills", 0),
+        ("active_slot_steps", 0),
+        ("total_slot_steps", 0),
+        ("predicted_a2a_s", 0.0),
+        # tiered pooling (TieredKVPool engines only)
+        ("demotions", 0),  # finished sessions parked in the hierarchy
+        ("wakeups", 0),  # resumes served from a resident row (no prefill)
+        ("cold_resumes", 0),  # resumes whose row was dropped (re-prefilled)
+        # admission-control shedding (docs/SERVING.md, autoscaling): shed
+        # work never allocates a KV slot and never counts toward goodput
+        ("rejected", 0),  # refused at submit (queue over max_queue_depth)
+        ("deadline_drops", 0),  # dropped unadmitted past their deadline
+        ("shed_tokens", 0),  # token budget of all shed requests (not served)
+    )
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = MetricsRegistry() if registry is None else registry
+        for name, default in self._SCALARS:
+            # reset, not just get-or-create: fresh metrics mean zeroed
+            # fields even when the registry is shared across runs
+            self.registry.counter(f"serve.engine.{name}", default).value = default
 
     @property
     def slot_utilization(self) -> float:
         return self.active_slot_steps / self.total_slot_steps if self.total_slot_steps else 0.0
+
+
+for _name, _default in EngineMetrics._SCALARS:
+    setattr(EngineMetrics, _name, registry_field(f"serve.engine.{_name}"))
+del _name, _default
 
 
 class ContinuousBatchingEngine:
@@ -831,6 +869,7 @@ class ContinuousBatchingEngine:
         audit: bool = False,
         tiers: Optional[TierConfig] = None,
         max_queue_depth: Optional[int] = None,
+        obs=None,
     ):
         if model.cfg.enc_dec:
             raise NotImplementedError("continuous batching supports decoder-only models")
@@ -839,6 +878,10 @@ class ContinuousBatchingEngine:
         self.mesh = mesh
         self.pad_id = pad_id
         self.seed = seed
+        # observability bundle (docs/OBSERVABILITY.md): NULL_OBS unless the
+        # launcher installed one; every hot-path hook hides behind one
+        # `enabled` attribute check
+        self._obs = obs if obs is not None else get_obs()
         self.queue = RequestQueue()
         # admission control: submissions past this queue depth are rejected
         # (state SHED) instead of building an unbounded backlog; None = admit
@@ -849,7 +892,9 @@ class ContinuousBatchingEngine:
         self.tiers = tiers
         self._cost_model = cost_model or CollectiveCostModel()
         self.pool = self._make_pool(n_slots, max_len)
-        self.metrics = EngineMetrics()
+        self.metrics = EngineMetrics(
+            registry=self._obs.registry if self._obs.enabled else None
+        )
         self._rid = itertools.count()
         self.requests: dict[int, Request] = {}
         self._busy_sessions: set[int] = set()  # one in-flight request per session
@@ -892,7 +937,7 @@ class ContinuousBatchingEngine:
         if self.tiers is not None:
             return TieredKVPool(
                 self.model, n_slots, capacity, self.tiers,
-                cost_model=self._cost_model,
+                cost_model=self._cost_model, obs=self._obs,
             )
         return KVPool(self.model, n_slots, capacity)
 
@@ -977,6 +1022,29 @@ class ContinuousBatchingEngine:
         self._decode = decode
         _JIT_CACHE[self._jit_cache_key()] = (prefill_into, decode)
 
+    def absorb_pool_metrics(self, registry: Optional[MetricsRegistry] = None) -> None:
+        """Refresh ``serve.pool.*`` counters in ``registry`` (default: the
+        metrics registry) from the live pool — last write wins, so calling
+        again after a migration updates rather than duplicates
+        (docs/OBSERVABILITY.md)."""
+        reg = registry if registry is not None else self.metrics.registry
+        pool = self.pool
+        stats = {
+            "n_slots": pool.n_slots,
+            "n_alloc": pool.n_alloc,
+            "n_evict": pool.n_evict,
+            "high_water": pool.high_water,
+        }
+        if pool.tiered:
+            stats.update(
+                n_demote=pool.n_demote, n_promote=pool.n_promote,
+                n_spill=pool.n_spill, n_refill=pool.n_refill,
+                n_drop=pool.n_drop, modeled_tier_s=pool.modeled_tier_s,
+                resident_sessions=pool.resident_sessions,
+                demoted_sessions=pool.demoted_sessions,
+            )
+        reg.absorb("serve.pool", stats)
+
     # ---------------- elasticity hooks ----------------
 
     def pause_admission(self) -> None:
@@ -1010,39 +1078,48 @@ class ContinuousBatchingEngine:
                 f"cannot migrate {len(active)} in-flight requests into "
                 f"{new_slots} slots — the survivor pool must hold every live row"
             )
+        obs = self._obs
         # one gather + one device->host sync for all live rows (extract_all),
         # not one sync per slot — the dominant term in the migration pause
-        rows = self.pool.extract_all([s for s, _ in active])
+        with (obs.tracer.span("migrate", "serve", phase="extract")
+              if obs.enabled else NULL_SPAN):
+            rows = self.pool.extract_all([s for s, _ in active])
         old = self.pool
         for s, _ in active:  # lifetime ledger: every allocate gets its free
             old.free(s)
-        if params is not None:
-            self.params = params
-        if mesh is not None:
-            self.mesh = mesh
-        self.pool = self._make_pool(new_slots, old.capacity)
-        self.pool.n_alloc += old.n_alloc
-        self.pool.n_evict += old.n_evict
-        self.pool.high_water = old.high_water
-        if self.pool.tiered and old.tiered:
-            # demoted rows are host-side and device-independent: the ledger
-            # outlives the mesh, it just moves to the rebuilt pool
-            self.pool.adopt(old)
-        self._reset_slot_state(new_slots)
-        new_slot_order = []
-        for (_, req), row in zip(active, rows):
-            slot = self.pool.allocate(req.rid)
-            req.slot = slot
-            self._slot_req[slot] = req
-            self._tokens[slot] = (
-                req.tokens_out[-1] if req.tokens_out else req.last_token
-            )
-            self._pos[slot] = req.prompt_len + len(req.tokens_out) - 1
-            self._temps[slot] = req.temperature
-            self._rids[slot] = req.sample_rid if req.sample_rid is not None else req.rid
-            new_slot_order.append(slot)
-        self.pool.insert_all(new_slot_order, rows)
-        self._build_jits()
+        with (obs.tracer.span("migrate", "serve", phase="rebuild")
+              if obs.enabled else NULL_SPAN):
+            if params is not None:
+                self.params = params
+            if mesh is not None:
+                self.mesh = mesh
+            self.pool = self._make_pool(new_slots, old.capacity)
+            self.pool.n_alloc += old.n_alloc
+            self.pool.n_evict += old.n_evict
+            self.pool.high_water = old.high_water
+            if self.pool.tiered and old.tiered:
+                # demoted rows are host-side and device-independent: the
+                # ledger outlives the mesh, it just moves to the rebuilt pool
+                self.pool.adopt(old)
+            self._reset_slot_state(new_slots)
+        with (obs.tracer.span("migrate", "serve", phase="insert")
+              if obs.enabled else NULL_SPAN):
+            new_slot_order = []
+            for (_, req), row in zip(active, rows):
+                slot = self.pool.allocate(req.rid)
+                req.slot = slot
+                self._slot_req[slot] = req
+                self._tokens[slot] = (
+                    req.tokens_out[-1] if req.tokens_out else req.last_token
+                )
+                self._pos[slot] = req.prompt_len + len(req.tokens_out) - 1
+                self._temps[slot] = req.temperature
+                self._rids[slot] = (
+                    req.sample_rid if req.sample_rid is not None else req.rid
+                )
+                new_slot_order.append(slot)
+            self.pool.insert_all(new_slot_order, rows)
+            self._build_jits()
         return len(rows)
 
     # ---------------- submission ----------------
@@ -1174,18 +1251,39 @@ class ContinuousBatchingEngine:
         toks = np.full((g, bucket), self.pad_id, np.int32)
         for i, r in enumerate(group):
             toks[i, : r.prompt_len] = r.prompt
-        firsts, self.pool.caches = self._prefill_into(
-            self.params,
-            jnp.asarray(toks),
-            jnp.asarray([r.prompt_len for r in group], jnp.int32),
-            self.pool.caches,
-            jnp.asarray(slots, jnp.int32),
-            jnp.asarray([r.temperature for r in group], jnp.float32),
-            jnp.asarray([r.sample_rid for r in group], jnp.int32),
-            jnp.asarray([r.idx_base for r in group], jnp.int32),
+        obs = self._obs
+        span = (
+            obs.tracer.span("prefill", "serve", group=g, bucket=bucket)
+            if obs.enabled else NULL_SPAN
         )
-        self.metrics.prefills += 1
-        firsts = np.asarray(firsts)
+        t0 = time.monotonic()
+        with span:
+            firsts, self.pool.caches = self._prefill_into(
+                self.params,
+                jnp.asarray(toks),
+                jnp.asarray([r.prompt_len for r in group], jnp.int32),
+                self.pool.caches,
+                jnp.asarray(slots, jnp.int32),
+                jnp.asarray([r.temperature for r in group], jnp.float32),
+                jnp.asarray([r.sample_rid for r in group], jnp.int32),
+                jnp.asarray([r.idx_base for r in group], jnp.int32),
+            )
+            self.metrics.prefills += 1
+            firsts = np.asarray(firsts)
+        if obs.enabled:
+            # calibration: the modeled cold-prefill price of the group vs
+            # the batched prefill wall (includes the device sync above)
+            obs.calibration.observe(
+                obs.calibration.record(
+                    "cold_prefill",
+                    sum(
+                        self.scheduler.cost_model.cold_prefill_cost(r.prompt_len)
+                        for r in group
+                    ),
+                    note=f"group={g}",
+                ),
+                time.monotonic() - t0,
+            )
         for i, (req, slot) in enumerate(zip(group, slots)):
             tok = int(firsts[i])
             req.state = RUNNING
@@ -1207,7 +1305,27 @@ class ContinuousBatchingEngine:
         """Wake a tier-resident session: page its row into a free slot and
         resume decode where it left off — no prefill at all.  The first new
         token comes from the next decode step (t_first is stamped then)."""
-        slot, rec = self.pool.promote(req.session_id, req.rid)
+        obs = self._obs
+        if obs.enabled:
+            # calibration: the wakeup price admission used, vs the cold
+            # prefill it displaced; observed closes with the promote wall
+            cal = obs.calibration.record(
+                "wakeup",
+                self.scheduler.cost_model.wakeup_cost(
+                    req.resume_bytes, req.resume_tier or "host"
+                ),
+                alternative_s=self.scheduler.cost_model.cold_prefill_cost(
+                    req.prompt_len
+                ),
+                chosen="wakeup", note=req.resume_tier or "host",
+            )
+            with obs.tracer.span("wakeup", "serve", sid=req.session_id,
+                                 tier=req.resume_tier):
+                t0 = time.monotonic()
+                slot, rec = self.pool.promote(req.session_id, req.rid)
+                obs.calibration.observe(cal, time.monotonic() - t0)
+        else:
+            slot, rec = self.pool.promote(req.session_id, req.rid)
         req.state = RUNNING
         req.slot = slot
         req.t_admit = now
@@ -1267,6 +1385,9 @@ class ContinuousBatchingEngine:
             self.metrics.deadline_drops += len(victims)
         else:
             self.metrics.rejected += len(victims)
+        if self._obs.enabled:
+            self._obs.tracer.instant("shed", "serve", n=len(victims),
+                                     deadline=deadline)
         return len(victims)
 
     def shed_queue(self, keep_depth: int, now: Optional[float] = None) -> int:
@@ -1288,6 +1409,9 @@ class ContinuousBatchingEngine:
         if now is None:
             now = time.monotonic()
         produced = 0
+        obs = self._obs
+        if obs.enabled:
+            obs.tracer.step = self.metrics.steps
 
         # ---- deadline drops: an unadmitted request past its deadline is
         # worthless — refund it from the queue before it wastes a slot
@@ -1350,16 +1474,20 @@ class ContinuousBatchingEngine:
                 ],
                 np.int32,
             )
-            toks, self.pool.caches = self._decode(
-                self.params,
-                self.pool.caches,
-                jnp.asarray(self._tokens),
-                jnp.asarray(self._pos),
-                jnp.asarray(self._temps),
-                jnp.asarray(self._rids),
-                jnp.asarray(idxs),
+            span = (
+                obs.tracer.span("decode", "serve") if obs.enabled else NULL_SPAN
             )
-            toks = np.asarray(toks)
+            with span:
+                toks, self.pool.caches = self._decode(
+                    self.params,
+                    self.pool.caches,
+                    jnp.asarray(self._tokens),
+                    jnp.asarray(self._pos),
+                    jnp.asarray(self._temps),
+                    jnp.asarray(self._rids),
+                    jnp.asarray(idxs),
+                )
+                toks = np.asarray(toks)
             self.metrics.decode_steps += 1
             self.metrics.total_slot_steps += self.pool.n_slots
             for slot, req in enumerate(self._slot_req):

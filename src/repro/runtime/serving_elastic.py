@@ -68,6 +68,8 @@ import numpy as np
 
 from ..launch import jax_compat
 from ..launch.mesh import make_elastic_mesh
+from ..obs import NULL_SPAN, get_obs
+from ..obs.metrics import MetricsRegistry, registry_field
 from . import sharding as shd
 from .autoscale import AutoscaleConfig, AutoscaleController, tree_nbytes
 from .orchestrator import FaultSchedule, StragglerLedger
@@ -104,33 +106,69 @@ class ServingOrchestratorConfig:
     spare_pods: int = 0
 
 
-@dataclasses.dataclass
 class ServingReport:
-    """What happened during an orchestrated serving run — the goodput ledger."""
+    """What happened during an orchestrated serving run — the goodput ledger.
 
-    steps: int = 0
-    tokens: int = 0
-    # tokens produced by each scheduling round that did work — the diurnal
-    # bench slices this at the gain step to compare post-regrow goodput
-    step_tokens: list = dataclasses.field(default_factory=list)
-    wall_s: float = 0.0
-    migrations: list = dataclasses.field(default_factory=list)
-    drains: list = dataclasses.field(default_factory=list)
-    drains_tolerated: list = dataclasses.field(default_factory=list)
-    shed: int = 0  # requests the autoscale controller turned away
-    controller_transitions: list = dataclasses.field(default_factory=list)
-    repricings: list = dataclasses.field(default_factory=list)
-    injected_slow_s: float = 0.0
-    slow_s_avoided: float = 0.0
-    mesh_history: list = dataclasses.field(default_factory=list)
-    log: list = dataclasses.field(default_factory=list)
-    final_state: str = "SERVING"
+    A thin view over a :class:`~repro.obs.metrics.MetricsRegistry`
+    (docs/OBSERVABILITY.md): every scalar field is a property over the
+    ``serve.*`` metric of the same name, so the registry and the legacy
+    report fields are one storage cell — ``--metrics`` dumps the registry,
+    and these fields stay bit-compatible for existing readers.
+    """
+
+    _SCALARS = (
+        ("steps", 0),
+        ("tokens", 0),
+        ("wall_s", 0.0),
+        ("shed", 0),  # requests the autoscale controller turned away
+        ("injected_slow_s", 0.0),
+        ("slow_s_avoided", 0.0),
+    )
+    _LISTS = (
+        # step_tokens: tokens produced by each scheduling round that did
+        # work — the diurnal bench slices this at the gain step to compare
+        # post-regrow goodput
+        "step_tokens", "migrations", "drains", "drains_tolerated",
+        "controller_transitions", "repricings", "mesh_history", "log",
+    )
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = MetricsRegistry() if registry is None else registry
+        for name, default in self._SCALARS:
+            # reset, not just get-or-create: a fresh report means zeroed
+            # fields even when the registry is shared across runs
+            self.registry.counter(f"serve.{name}", default).value = default
+        for name in self._LISTS:
+            setattr(self, name, [])
+        self.final_state = "SERVING"
 
     def goodput(self) -> float:
         return self.tokens / self.wall_s if self.wall_s > 0 else 0.0
 
     def to_json(self) -> dict:
-        return dataclasses.asdict(self)
+        # same keys, same order as the pre-registry dataclass emitted
+        return {
+            "steps": self.steps,
+            "tokens": self.tokens,
+            "step_tokens": list(self.step_tokens),
+            "wall_s": self.wall_s,
+            "migrations": list(self.migrations),
+            "drains": list(self.drains),
+            "drains_tolerated": list(self.drains_tolerated),
+            "shed": self.shed,
+            "controller_transitions": list(self.controller_transitions),
+            "repricings": list(self.repricings),
+            "injected_slow_s": self.injected_slow_s,
+            "slow_s_avoided": self.slow_s_avoided,
+            "mesh_history": list(self.mesh_history),
+            "log": list(self.log),
+            "final_state": self.final_state,
+        }
+
+
+for _name, _default in ServingReport._SCALARS:
+    setattr(ServingReport, _name, registry_field(f"serve.{_name}"))
+del _name, _default
 
 
 class ServingOrchestrator:
@@ -157,6 +195,9 @@ class ServingOrchestrator:
         cfg: ServingOrchestratorConfig = ServingOrchestratorConfig(),
     ):
         self.engine = engine
+        # share the engine's observability bundle: one tracer/ledger per run
+        # (docs/OBSERVABILITY.md)
+        self._obs = engine._obs
         self.schedule = schedule
         self.cfg = cfg
         self.state = "SERVING"
@@ -200,7 +241,9 @@ class ServingOrchestrator:
         )
         self._base_devices = self._avail
         self._base_slots = engine.pool.n_slots
-        self.report = ServingReport()
+        self.report = ServingReport(
+            registry=self._obs.registry if self._obs.enabled else None
+        )
 
     # ------------------------------------------------------------- helpers
 
@@ -231,17 +274,43 @@ class ServingOrchestrator:
             # machine, so shrink→grow round trips restore the original pool
             scaled = int(np.ceil(self._base_slots * usable / self._base_devices))
             n_slots = max(1, n_active, scaled)
+        obs = self._obs
+        live_bytes = 0
+        if obs.enabled:
+            live_bytes = tree_nbytes(eng.params) + int(
+                (tree_nbytes(eng.pool.caches) / eng.pool.n_slots) * n_active
+                if eng.pool.n_slots else 0
+            )
+        span = (
+            obs.tracer.span("migrate", "serve", reason=reason, lost=lost)
+            if obs.enabled else NULL_SPAN
+        )
         t0 = time.monotonic()
-        eng.pause_admission()
-        self.state = "MIGRATE"
-        new_params = shd.reshard_params(eng.model.param_axes(), eng.params, new_mesh)
-        migrated = eng.migrate(params=new_params, mesh=new_mesh, n_slots=n_slots)
-        eng.pool.check()
-        eng.resume_admission()
+        with span:
+            eng.pause_admission()
+            self.state = "MIGRATE"
+            new_params = shd.reshard_params(
+                eng.model.param_axes(), eng.params, new_mesh
+            )
+            migrated = eng.migrate(params=new_params, mesh=new_mesh,
+                                   n_slots=n_slots)
+            eng.pool.check()
+            eng.resume_admission()
         self.state = "SERVING"
         self.mesh_ctx = jax_compat.MeshContext.from_any(new_mesh)
         self._avail = survivors
         dt = time.monotonic() - t0
+        if obs.enabled:
+            # calibration: the migration price (params + live KV rows) vs
+            # the pause wall the migration actually took
+            obs.calibration.observe(
+                obs.calibration.record(
+                    "migration",
+                    self._base_cost_model.migration_cost(live_bytes),
+                    step=step, note=reason,
+                ),
+                dt,
+            )
         rec = {
             "step": step, "reason": reason, "lost_devices": lost,
             "survivors": survivors, "devices_used": usable,
@@ -276,6 +345,9 @@ class ServingOrchestrator:
         )
         after = sch._step_cost(1)
         self.state = "DEGRADED_SCHED" if self.link_factor < 1.0 else "SERVING"
+        if self._obs.enabled:
+            self._obs.tracer.instant("reprice", "serve", event=ev.kind,
+                                     link_factor=self.link_factor)
         rec = {
             "step": step, "event": ev.kind, "link_factor": self.link_factor,
             "a2a_cost_per_heavy_before_s": before,
@@ -302,7 +374,10 @@ class ServingOrchestrator:
         accounted, not slept).  Returns ``{rid: tokens}`` for completed
         requests; the ledger is in ``self.report``."""
         eng = self.engine
-        report = self.report = ServingReport()
+        obs = self._obs
+        report = self.report = ServingReport(
+            registry=obs.registry if obs.enabled else None
+        )
         if self.mesh_ctx is not None:
             report.mesh_history.append((0, self._mesh_shape()))
         wall = clock is None
@@ -382,6 +457,16 @@ class ServingOrchestrator:
                 decision = controller.drain_decision(
                     row_bytes * n_active, entry[0].slowdown, entry[1]
                 )
+                if obs.enabled:
+                    # calibration: drain price vs remaining slowdown; the
+                    # observed cost closes with the migrate wall when the
+                    # drain actually runs (tolerated drains never do)
+                    cal_rec = obs.calibration.record(
+                        "drain", decision["cost_s"],
+                        alternative_s=decision["remaining_slow_s"],
+                        chosen="drain" if decision["drain"] else "tolerate",
+                        step=step,
+                    )
                 if not decision["drain"]:
                     tolerated.add(id(entry))
                     report.drains_tolerated.append(
@@ -399,6 +484,8 @@ class ServingOrchestrator:
                 rec["slow_s_avoided"] = avoided
                 report.drains.append(rec)
                 report.slow_s_avoided += avoided
+                if obs.enabled:
+                    obs.calibration.observe(cal_rec, rec["migrate_s"])
             step += 1
             report.steps = step
             report.step_tokens.append(made)

@@ -241,21 +241,60 @@ def test_training_bench_tiny_emits_wellformed_json(tmp_path):
 
 def test_make_report_syncs_bench_artifacts(tmp_path):
     """BENCH_*.json artifacts from benchmarks/results/ are mirrored to the
-    repo root so the bench trajectory is tracked at the top level."""
+    repo root so the bench trajectory is tracked at the top level; synced
+    copies missing a provenance stamp get one backfilled
+    (docs/OBSERVABILITY.md) without disturbing the payload."""
     from benchmarks.make_report import sync_bench_artifacts
 
     res = tmp_path / "results"
     res.mkdir()
     (res / "BENCH_demo.json").write_text('{"goodput": 1}')
+    (res / "BENCH_stamped.json").write_text('{"goodput": 2, "provenance": {"git_sha": "abc"}}')
     (res / "bench_results.json").write_text("{}")  # not a BENCH_* artifact
     dest = tmp_path / "root"
     dest.mkdir()
     written = sync_bench_artifacts(str(res), str(dest))
-    assert [os.path.basename(p) for p in written] == ["BENCH_demo.json"]
-    assert json.loads((dest / "BENCH_demo.json").read_text()) == {"goodput": 1}
+    assert [os.path.basename(p) for p in written] == [
+        "BENCH_demo.json", "BENCH_stamped.json"]
+    demo = json.loads((dest / "BENCH_demo.json").read_text())
+    assert demo["goodput"] == 1
+    assert {"git_sha", "argv", "host", "python", "timestamp_utc",
+            "suite_version"} <= set(demo["provenance"])
+    # already-stamped artifacts are copied verbatim (provenance untouched)
+    stamped = json.loads((dest / "BENCH_stamped.json").read_text())
+    assert stamped == {"goodput": 2, "provenance": {"git_sha": "abc"}}
     assert not (dest / "bench_results.json").exists()
     # empty results dir is a no-op
     assert sync_bench_artifacts(str(tmp_path / "missing"), str(dest)) == []
+
+
+def test_trace_demo_writes_traces_and_calibration(tmp_path):
+    """`make trace-demo` (docs/OBSERVABILITY.md): both faulted orchestrator
+    runs complete, both Perfetto traces land on disk, and the calibration
+    artifact covers at least three distinct priced-decision kinds with
+    observed costs."""
+    from benchmarks.trace_demo import main
+
+    payload = main(["--out", str(tmp_path)])
+    for name in ("train_trace", "serve_trace"):
+        doc = json.loads((tmp_path / "traces" / f"{name}.json").read_text())
+        assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+        assert (tmp_path / "traces" / f"{name}.jsonl").exists()
+    train_names = {e["name"] for e in json.loads(
+        (tmp_path / "traces" / "train_trace.json").read_text())["traceEvents"]}
+    assert "remesh" in train_names
+    serve_names = {e["name"] for e in json.loads(
+        (tmp_path / "traces" / "serve_trace.json").read_text())["traceEvents"]}
+    assert "migrate" in serve_names and "wakeup" in serve_names
+
+    on_disk = json.loads((tmp_path / "BENCH_calibration.json").read_text())
+    assert on_disk["records"] == payload["records"]
+    kinds = set(on_disk["summary"])
+    assert len(kinds) >= 3, kinds
+    assert {"grad_sync", "migration", "tier_transfer"} <= kinds
+    for kind, s in on_disk["summary"].items():
+        assert s["n"] >= 1, kind
+    assert "provenance" in on_disk
 
 
 def test_paper_tables_row_shape():
