@@ -116,6 +116,30 @@ def build_simulator(results_path: str = "benchmarks/results/bench_results.json")
             ]),
             "",
         ]
+        mat = sim.get("matrix")
+        if mat:
+            lines += [
+                f"\n#### Scenario × fault matrix ({mat['clex']} vs torus "
+                f"{mat['torus']}, mode={mat['mode']}, streaming engine)\n",
+                f"Faulted rows inject {mat['dead_nodes']} dead nodes "
+                f"(node_rate={mat['node_rate']}); peak RSS "
+                f"{mat['peak_rss_mb']} MB, {mat['wall_s']}s.\n",
+                _markdown_table(mat["rows"]),
+                "",
+            ]
+        pa2a = sim.get("all_to_all")
+        if pa2a:
+            lines += [
+                "\n#### All-to-all flooding (streaming engine)\n",
+                f"Clean at {pa2a['clean_topo']} "
+                f"({pa2a['clean']['method'].replace('_', ' ')}); faulted at "
+                f"{pa2a['faulty_topo']} (enumerated + patched).\n",
+                _markdown_table([
+                    {"run": "clean", **pa2a["clean"]},
+                    {"run": "faulty", **pa2a["faulty"]},
+                ]),
+                "",
+            ]
     mat = results.get("scenario_matrix")
     if mat:
         rows = mat["rows"] if isinstance(mat, dict) else mat

@@ -141,6 +141,105 @@ def run_paper_scale(
     }
 
 
+def run_paper_matrix(
+    m: int = 32,
+    L: int = 4,
+    msgs_per_node: int = 4,
+    mode: str = "dense",
+    chunk_size: int = 1 << 21,
+    seed: int = 1,
+    node_rate: float = 0.01,
+    scenarios: "list[str] | None" = None,
+):
+    """The scenario x fault grid at paper scale (n = m^L) on the streaming
+    engine: every registered traffic scenario (hotspot, transpose,
+    same-copy, bursty, uniform) against the equal-size torus DOR baseline,
+    once fault-free and once with ``node_rate`` dead nodes injected.
+
+    Traffic comes from :func:`repro.core.iter_traffic` — O(chunk)
+    counter-hash generators, so peak memory stays O(chunk) end-to-end and
+    the whole grid fits in a few GB at n = 32^4.  Every cell runs under a
+    tracer span and records a ``sim.matrix.peak_rss_mb`` gauge."""
+    import resource
+
+    import numpy as np
+
+    from repro.core import CLEXTopology, FaultSet, TorusTopology, scenario_matrix
+    from repro.core.sim_engine import StreamingEngine
+
+    topo = CLEXTopology(m, L)
+    tor = TorusTopology.cube(max(2, int(round(topo.n ** (1 / 3)))))
+    eng = StreamingEngine(chunk_size=chunk_size)
+    t0 = time.time()
+    clean = scenario_matrix(topo, tor, msgs_per_node=msgs_per_node, mode=mode,
+                            seed=seed, scenarios=scenarios, engine=eng)
+    faults = FaultSet.sample(topo, node_rate=node_rate,
+                             rng=np.random.default_rng(seed))
+    faulted = scenario_matrix(topo, tor, msgs_per_node=msgs_per_node, mode=mode,
+                              seed=seed, scenarios=scenarios, faults=faults,
+                              engine=eng)
+    rows = ([{"faults": "none", **r} for r in clean]
+            + [{"faults": f"node_rate={node_rate}", **r} for r in faulted])
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    return {
+        "engine": "streaming",
+        "clex": f"C(1/{L},{L}) m={m} n={topo.n}",
+        "torus": f"{tor.k1}^3 n={tor.n}",
+        "msgs_per_node": msgs_per_node,
+        "mode": mode,
+        "chunk_size": chunk_size,
+        "node_rate": node_rate,
+        "dead_nodes": len(faults.dead_nodes),
+        "rows": rows,
+        "peak_rss_mb": round(rss_mb, 1),
+        "wall_s": round(time.time() - t0, 2),
+    }
+
+
+def run_paper_all_to_all(
+    m: int = 32,
+    L: int = 4,
+    chunk_size: int = 1 << 21,
+    seed: int = 1,
+    node_rate: float = 0.05,
+):
+    """Sec. II-C all-to-all flooding on the streaming engine, paper scale.
+
+    The clean run uses the full (m, L): above the pair-enumeration budget
+    the streaming engine reports the exact closed form (per-edge load is
+    exactly n/m at every level), so n^2 ~= 10^12 pairs cost O(1).  The
+    faulted run needs explicit broken-pair patching, so it enumerates a
+    capped topology (min(m, 12), min(L, 3)) in chunked bincount passes."""
+    import resource
+
+    import numpy as np
+
+    from repro.core import CLEXTopology, FaultSet, simulate_all_to_all
+    from repro.core.scenarios import asymmetric_bandwidth
+
+    topo = CLEXTopology(m, L)
+    t0 = time.time()
+    clean = simulate_all_to_all(topo, bandwidth=asymmetric_bandwidth(topo),
+                                engine="streaming")
+    fm, fL = min(m, 12), min(L, 3)
+    ftopo = CLEXTopology(fm, fL)
+    faults = FaultSet.sample(ftopo, node_rate=node_rate,
+                             rng=np.random.default_rng(seed))
+    faulted = simulate_all_to_all(ftopo, bandwidth=asymmetric_bandwidth(ftopo),
+                                  faults=faults, seed=seed, engine="streaming")
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    return {
+        "engine": "streaming",
+        "clean_topo": f"m={m} L={L} n={topo.n}",
+        "clean": {"method": clean.method, **clean.row()},
+        "faulty_topo": f"m={fm} L={fL} n={ftopo.n}",
+        "faulty": {"method": faulted.method, **faulted.row()},
+        "fault_summary": faulted.fault_summary,
+        "peak_rss_mb": round(rss_mb, 1),
+        "wall_s": round(time.time() - t0, 2),
+    }
+
+
 # ---- scenario engine / fault injection (beyond the paper's tables) --------
 # CI-scale topologies: CLEX and torus at the same node count for a fair
 # matrix; --full uses the paper's C(1/3,3) against the equivalent torus.

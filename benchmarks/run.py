@@ -44,6 +44,10 @@ def main(argv: list | None = None) -> dict:
     ap.add_argument("--paper-torus-k", type=int, default=None,
                     help="torus side length (default: round(n^(1/3)))")
     ap.add_argument("--paper-torus-msgs", type=int, default=4)
+    ap.add_argument("--paper-matrix-msgs", type=int, default=4,
+                    help="messages per node for the scenario x fault matrix")
+    ap.add_argument("--paper-node-rate", type=float, default=0.01,
+                    help="dead-node rate for the matrix's faulted rows")
     args = ap.parse_args(argv)
 
     from benchmarks import collective_model, paper_tables
@@ -57,6 +61,14 @@ def main(argv: list | None = None) -> dict:
             m=args.paper_m, L=args.paper_L, msgs_per_node=args.paper_msgs,
             mode=args.paper_mode, torus_k=args.paper_torus_k,
             torus_msgs=args.paper_torus_msgs, chunk_size=args.paper_chunk,
+        )
+        res["matrix"] = paper_tables.run_paper_matrix(
+            m=args.paper_m, L=args.paper_L, msgs_per_node=args.paper_matrix_msgs,
+            mode=args.paper_mode, chunk_size=args.paper_chunk,
+            node_rate=args.paper_node_rate,
+        )
+        res["all_to_all"] = paper_tables.run_paper_all_to_all(
+            m=args.paper_m, L=args.paper_L, chunk_size=args.paper_chunk,
         )
         res["provenance"] = provenance()
         out_path = os.path.join(args.out, "BENCH_sim.json")
@@ -75,6 +87,27 @@ def main(argv: list | None = None) -> dict:
             res["torus"]["wall_s"] * 1e6,
             f"avg_hops={res['torus']['avg_hops']};"
             f"max_link_load={res['torus']['max_link_load']}",
+        )
+        mat = res["matrix"]
+        _emit("paper_matrix_total", mat["wall_s"] * 1e6,
+              f"rows={len(mat['rows'])};peak_rss_mb={mat['peak_rss_mb']}")
+        for r in mat["rows"]:
+            tag = "" if r["faults"] == "none" else "_faulted"
+            _emit(
+                f"paper_matrix_{r['scenario']}{tag}",
+                0.0,
+                f"clex_rds={r['clex_sum_avg_rds']};"
+                f"torus_lb={r['torus_rounds_lb']};"
+                f"gain={r['rounds_gain_vs_torus_lb']}",
+            )
+        a2a = res["all_to_all"]
+        _emit(
+            "paper_a2a",
+            a2a["wall_s"] * 1e6,
+            f"clean[{a2a['clean']['method']}]_vs_bound="
+            f"{a2a['clean']['rounds_vs_bound']};"
+            f"faulty[{a2a['faulty']['method']}]_patched="
+            f"{a2a['faulty']['patched']}",
         )
         log.info(f"  peak_rss_mb={res['peak_rss_mb']} total={res['wall_s_total']}s")
         if os.path.abspath(args.out) == os.path.abspath("benchmarks/results"):

@@ -3,11 +3,13 @@ injection, analysis, and the JAX hierarchical collectives that port the
 paper's technique to TPU meshes."""
 
 from .analysis import DerivedComparison, all_to_all_comparison, derive_comparison
+from .hashrng import hash_randint, hash_u01, pseudo_permutation
 from .routing import (
     UnroutableError,
     all_to_all_tree_hops,
     bundle_hop,
     copy_schedule,
+    flood_edge_keys,
     flood_route,
     log_star,
     sample_gateways,
@@ -35,7 +37,7 @@ from .simulator import (
     simulate_point_to_point,
     uniform_permutation_traffic,
 )
-from .streaming import simulate_point_to_point_streaming
+from .streaming import simulate_all_to_all_streaming, simulate_point_to_point_streaming
 from .torus_sim import (
     TorusSimResult,
     TorusStreamResult,
@@ -69,17 +71,22 @@ __all__ = [
     "derive_comparison",
     "digit",
     "fault_degradation_curve",
+    "flood_edge_keys",
     "flood_route",
     "get_engine",
+    "hash_randint",
+    "hash_u01",
     "iter_traffic",
     "log_star",
     "make_traffic",
+    "pseudo_permutation",
     "run_clex_scenario",
     "run_torus_scenario",
     "sample_gateways",
     "sample_gateways_faulty",
     "scenario_matrix",
     "simulate_all_to_all",
+    "simulate_all_to_all_streaming",
     "simulate_point_to_point",
     "simulate_point_to_point_streaming",
     "simulate_torus_dor",

@@ -1,0 +1,113 @@
+"""Counter-based hash RNG shared by the streaming engine and the traffic
+generators.
+
+Everything here is a pure function of ``(seed, call-path key, global
+counter)``: draw i is identical whatever chunk it arrives in, which is
+what makes the streaming engine and the scenario generators bit-invariant
+to chunk size.  The core is the splitmix64 finalizer (a bijective
+avalanche over uint64); salts are derived with blake2b so results do not
+depend on ``PYTHONHASHSEED``.
+
+:func:`pseudo_permutation` extends the toolkit with a *pseudorandom
+bijection* on ``[0, domain)`` — a balanced Feistel network with
+cycle-walking (format-preserving encryption over an integer domain).
+That is what lets a generator evaluate "a uniform permutation of the
+message multiset" or "a random k-subset of the nodes" at arbitrary
+indices in O(chunk), with no O(n · msgs) shuffle ever materialised.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+__all__ = [
+    "hash_randint",
+    "hash_u01",
+    "mix64",
+    "pseudo_permutation",
+    "salt_for",
+]
+
+_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer: a bijective avalanche over uint64."""
+    x = x ^ (x >> np.uint64(30))
+    x = x * _MIX1
+    x = x ^ (x >> np.uint64(27))
+    x = x * _MIX2
+    return x ^ (x >> np.uint64(31))
+
+
+def salt_for(seed: int, *parts) -> np.uint64:
+    """Stable 64-bit salt from (seed, call key, stage) — blake2b, not
+    ``hash()``, so results do not depend on PYTHONHASHSEED."""
+    h = hashlib.blake2b(repr((seed,) + parts).encode(), digest_size=8).digest()
+    return np.uint64(int.from_bytes(h, "little"))
+
+
+def hash_u01(gidx: np.ndarray, salt: np.uint64) -> np.ndarray:
+    """Uniform [0, 1) per global index — counter-based, so the draw for
+    index i is identical whatever chunk it arrives in."""
+    h = mix64(gidx.astype(np.uint64) * _GAMMA + salt)
+    return (h >> np.uint64(11)).astype(np.float64) * (2.0 ** -53)
+
+
+def hash_randint(gidx: np.ndarray, bound, salt: np.uint64) -> np.ndarray:
+    """Uniform integers in [0, bound) per global index; ``bound`` may be a
+    scalar or a per-index array."""
+    u = hash_u01(gidx, salt)
+    b = np.asarray(bound, dtype=np.int64)
+    return np.minimum((u * b).astype(np.int64), b - 1)
+
+
+def _feistel(x: np.ndarray, half_bits: int, salt: np.uint64, rounds: int) -> np.ndarray:
+    """One pass of a balanced Feistel network over ``2 * half_bits`` bits.
+
+    The round function is the splitmix64 avalanche of (half, salt, round) —
+    any function works here; Feistel structure alone makes the pass a
+    bijection on [0, 2^(2 * half_bits))."""
+    shift = np.uint64(half_bits)
+    mask = np.uint64((1 << half_bits) - 1)
+    hi = (x >> shift) & mask
+    lo = x & mask
+    for r in range(rounds):
+        round_salt = salt ^ np.uint64((r * int(_MIX2)) & 0xFFFFFFFFFFFFFFFF)
+        f = mix64(lo * _GAMMA + round_salt) & mask
+        hi, lo = lo, hi ^ f
+    return (hi << shift) | lo
+
+
+def pseudo_permutation(
+    idx: np.ndarray, domain: int, salt: np.uint64, rounds: int = 4
+) -> np.ndarray:
+    """Evaluate a pseudorandom bijection of ``[0, domain)`` at ``idx``.
+
+    A balanced Feistel network over the smallest even-split power of two
+    >= ``domain``, with cycle-walking: values that land outside the domain
+    are re-encrypted until they fall inside (the Feistel pass is a
+    bijection on its power-of-two domain, so walking visits each coset
+    element once and terminates; the power-of-two domain is < 4 * domain,
+    so the expected walk length is < 4).  Deterministic in
+    ``(idx, domain, salt)`` — evaluating element-wise, in chunks, or all
+    at once gives identical values, and ``{perm(i) : i in [0, domain)}``
+    is exactly ``[0, domain)``.
+    """
+    domain = int(domain)
+    out = np.asarray(idx, dtype=np.uint64).copy()
+    if domain <= 1:
+        return np.zeros(out.shape, dtype=np.int64)
+    if (out >= domain).any():
+        raise ValueError(f"indices must lie in [0, {domain})")
+    half_bits = max(1, ((domain - 1).bit_length() + 1) // 2)
+    out = _feistel(out, half_bits, salt, rounds)
+    walking = np.flatnonzero(out >= domain)
+    while walking.size:
+        out[walking] = _feistel(out[walking], half_bits, salt, rounds)
+        walking = walking[out[walking] >= domain]
+    return out.astype(np.int64)

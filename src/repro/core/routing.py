@@ -31,6 +31,7 @@ __all__ = [
     "bundle_rounds_from_counts",
     "all_to_all_tree_hops",
     "flood_route",
+    "flood_edge_keys",
     "valiant_intermediate",
     "UnroutableError",
 ]
@@ -326,6 +327,26 @@ def flood_route(topo: CLEXTopology, src: np.ndarray, dst: np.ndarray) -> np.ndar
     if not np.array_equal(pos[L], dst):
         raise AssertionError("flood route failed to reach destinations")
     return pos
+
+
+def flood_edge_keys(topo: CLEXTopology, pos: np.ndarray, dst: np.ndarray,
+                    level: int) -> np.ndarray:
+    """Bincount key (``node * m + edge_index``, key space n*m) identifying
+    the directed edge a flood-routed message uses at hop ``level``.
+
+    Level 1 (clique): the edge from ``pos[0]`` to ``pos[1]`` — the two
+    differ only in digit 0, so the target's low digit indexes the edge
+    within the clique (callers mask out no-op hops, where the key would
+    name the self-loop).  Level >= 2 (bundle): the bundle edge out of
+    gateway ``pos[level-1]``, whose free parallel-edge index is the
+    destination digit ``level - 2`` planted by the pipelined schedule.
+    Both engines' all-to-all load accounting bincounts these keys, which
+    is what makes their per-edge histograms directly comparable.
+    """
+    m = topo.m
+    if level == 1:
+        return pos[0] * np.int64(m) + digit(pos[1], 0, m)
+    return pos[level - 1] * np.int64(m) + digit(dst, level - 2, m)
 
 
 def valiant_intermediate(

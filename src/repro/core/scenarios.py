@@ -9,15 +9,25 @@ degraded hardware.  This module closes that gap:
 * :class:`TrafficScenario` — a named traffic generator working on both
   :class:`CLEXTopology` and :class:`TorusTopology` (``SCENARIOS`` registry:
   uniform, hotspot, transpose, same_copy, bursty), each with a
-  recommended Valiant-randomization level that callers can override;
+  recommended Valiant-randomization level that callers can override.
+  Generators are *streaming*: endpoints are a pure counter-hash function
+  of ``(seed, scenario, global message index)`` (permutations come from a
+  Feistel bijection, :func:`~.hashrng.pseudo_permutation`), so
+  :func:`iter_traffic` draws any chunk in O(chunk) and the stream is
+  bit-invariant to chunk size — the same contract as the streaming
+  engine's own RNG;
 * :func:`run_clex_scenario` / :func:`run_torus_scenario` — drive either
   simulator through a scenario (CLEX optionally with injected
-  :class:`FaultSet` faults);
+  :class:`FaultSet` faults); seeds split through :func:`_derive_seeds`
+  so golden and streaming engines consume identical traffic;
 * :func:`scenario_matrix` — CLEX-vs-torus across all scenarios, the
-  ROADMAP's scenario-diversity table;
+  ROADMAP's scenario-diversity table (tracer span + peak-RSS gauge per
+  cell);
 * :func:`simulate_all_to_all` — the Sec. II-C flooding schedule under an
   (asymmetric) per-level bandwidth assignment, validated against the
-  analytic bound of :func:`analysis.all_to_all_comparison`;
+  analytic bound of :func:`analysis.all_to_all_comparison`; runs on the
+  golden engine (explicit pairs, small n) or the streaming engine
+  (:func:`~.streaming.simulate_all_to_all_streaming`, paper scale);
 * :func:`fault_degradation_curve` — delivery/slowdown vs fault rate, the
   inherent-fault-tolerance demonstration.
 """
@@ -26,17 +36,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
+from typing import Callable, Iterator
 
 import numpy as np
 
 from ..obs import NULL_SPAN, get_obs
 from .analysis import all_to_all_comparison
-from .routing import flood_route
+from .hashrng import hash_randint, hash_u01, pseudo_permutation, salt_for
+from .routing import flood_edge_keys, flood_route
 from .sim_engine import get_engine
 from .simulator import SimulationResult, simulate_point_to_point
+from .streaming import _peak_rss_mb
 from .topology import CLEXTopology, FaultSet, TorusTopology, digit
-from .torus_sim import TorusSimResult
 
 __all__ = [
     "TrafficScenario",
@@ -56,69 +67,90 @@ Traffic = "tuple[np.ndarray, np.ndarray]"
 
 @dataclasses.dataclass(frozen=True)
 class TrafficScenario:
-    """A named traffic pattern: ``generate(topo, msgs_per_node, rng)`` returns
-    ``(src, dst)`` message endpoints on any topology exposing ``.n``.
+    """A named streaming traffic pattern on any topology exposing ``.n``.
 
-    ``valiant_level`` is the recommended Valiant randomization for CLEX runs:
-    ``None`` (uniform enough already), ``"global"`` (u.i.r. over the whole
-    machine), or an int level for the lightweight within-copy variant.
-    Callers toggle it per run via ``run_clex_scenario(..., valiant=...)``.
+    ``chunk(topo, msgs_per_node, seed, gidx)`` returns the ``(src, dst)``
+    endpoints for the global message indices ``gidx`` — a pure function
+    of ``(seed, gidx)``, so any chunking of ``[0, count)`` yields the
+    same stream (the generators' chunk-size-invariance contract, pinned
+    by tests/test_scenarios.py).  ``count(topo, msgs_per_node)`` is the
+    total number of messages the scenario emits.
+
+    ``valiant_level`` is the recommended Valiant randomization for CLEX
+    runs: ``None`` (uniform enough already), ``"global"`` (u.i.r. over
+    the whole machine), or an int level for the lightweight within-copy
+    variant.  Callers toggle it per run via
+    ``run_clex_scenario(..., valiant=...)``.
     """
 
     name: str
     description: str
-    generate: Callable
+    chunk: Callable
     valiant_level: "str | int | None" = None
+    count: Callable = lambda topo, msgs_per_node: topo.n * msgs_per_node
 
 
-def _sources(n: int, msgs_per_node: int) -> np.ndarray:
-    return np.repeat(np.arange(n, dtype=np.int64), msgs_per_node)
+def _tsalt(seed: int, name: str, stage: str) -> np.uint64:
+    """Salt for one (scenario, stage) draw stream — distinct per scenario
+    so e.g. hotspot's base permutation differs from uniform's."""
+    return salt_for(seed, "traffic", name, stage)
 
 
-def _uniform(topo, msgs_per_node: int, rng: np.random.Generator):
-    """The paper's traffic: a uniform permutation of the balanced multiset."""
-    src = _sources(topo.n, msgs_per_node)
-    dst = src.copy()
-    rng.shuffle(dst)
-    return src, dst
+def _perm_sources(msgs_per_node: int, gidx: np.ndarray) -> np.ndarray:
+    """The balanced source multiset: node i sends messages
+    [i * msgs_per_node, (i+1) * msgs_per_node)."""
+    return gidx // msgs_per_node
 
 
-def _hotspot(topo, msgs_per_node: int, rng: np.random.Generator,
-             hot_fraction: float = 1 / 64, p_hot: float = 0.5):
+def _uniform_chunk(topo, msgs_per_node: int, seed: int, gidx: np.ndarray):
+    """The paper's traffic: a uniform permutation of the balanced multiset
+    (dst is the same multiset as src, in Feistel-permuted order)."""
+    total = topo.n * msgs_per_node
+    src = _perm_sources(msgs_per_node, gidx)
+    dst = pseudo_permutation(gidx, total, _tsalt(seed, "uniform", "perm"))
+    return src, dst // msgs_per_node
+
+
+def _hotspot_chunk(topo, msgs_per_node: int, seed: int, gidx: np.ndarray,
+                   hot_fraction: float = 1 / 64, p_hot: float = 0.5):
     """A small hot set draws ``p_hot`` of all traffic; the rest is a uniform
-    permutation — the incast pattern that collapses mesh networks."""
+    permutation — the incast pattern that collapses mesh networks.  The
+    hot set is the first ``ceil(hot_fraction * n)`` entries of a Feistel
+    permutation of the nodes (O(n/64) state, recomputed per chunk)."""
     n = topo.n
-    src = _sources(n, msgs_per_node)
-    dst = src.copy()
-    rng.shuffle(dst)
-    hot = rng.choice(n, size=max(1, int(round(hot_fraction * n))), replace=False)
-    to_hot = rng.random(src.shape[0]) < p_hot
-    dst[to_hot] = rng.choice(hot, size=int(to_hot.sum()), replace=True)
+    total = n * msgs_per_node
+    src = _perm_sources(msgs_per_node, gidx)
+    dst = pseudo_permutation(gidx, total, _tsalt(seed, "hotspot", "perm")) // msgs_per_node
+    k = max(1, int(round(hot_fraction * n)))
+    hot = pseudo_permutation(np.arange(k, dtype=np.int64), n,
+                             _tsalt(seed, "hotspot", "hotset"))
+    to_hot = hash_u01(gidx, _tsalt(seed, "hotspot", "tohot")) < p_hot
+    dst[to_hot] = hot[hash_randint(gidx[to_hot], k, _tsalt(seed, "hotspot", "pick"))]
     return src, dst
 
 
-def _transpose(topo, msgs_per_node: int, rng: np.random.Generator):
+def _transpose_chunk(topo, msgs_per_node: int, seed: int, gidx: np.ndarray):
     """Digit/coordinate reversal: the classic adversarial permutation for
     dimension-ordered and hierarchical routers (every message must cross
-    the whole hierarchy; no locality to exploit)."""
+    the whole hierarchy; no locality to exploit).  Pure digit arithmetic
+    per chunk — no RNG, no O(n) permutation array."""
     n = topo.n
-    ids = np.arange(n, dtype=np.int64)
+    src = _perm_sources(msgs_per_node, gidx)
     if isinstance(topo, CLEXTopology):
         m, L = topo.m, topo.L
-        perm = np.zeros(n, dtype=np.int64)
+        dst = np.zeros_like(src)
         for p in range(L):
-            perm += digit(ids, p, m) * m ** (L - 1 - p)
+            dst += digit(src, p, m) * m ** (L - 1 - p)
     elif isinstance(topo, TorusTopology) and topo.k1 == topo.k2 == topo.k3:
-        x, y, z = topo.node_xyz(ids)
-        perm = y + topo.k1 * (z + topo.k2 * x)  # rotate (x,y,z) -> (y,z,x)
+        x, y, z = topo.node_xyz(src)
+        dst = y + topo.k1 * (z + topo.k2 * x)  # rotate (x,y,z) -> (y,z,x)
     else:
-        perm = n - 1 - ids  # index reversal: always a permutation
-    src = _sources(n, msgs_per_node)
-    return src, perm[src]
+        dst = n - 1 - src  # index reversal: always a permutation
+    return src, dst
 
 
-def _same_copy(topo, msgs_per_node: int, rng: np.random.Generator,
-               fraction: float | None = None):
+def _same_copy_chunk(topo, msgs_per_node: int, seed: int, gidx: np.ndarray,
+                     fraction: float | None = None):
     """Same-copy adversarial: every node floods one level-(L-1) copy (for the
     torus: one equally-sized block of node ids).  The worst case for the
     un-randomized algorithm — the paper's Valiant argument exists for this."""
@@ -127,77 +159,124 @@ def _same_copy(topo, msgs_per_node: int, rng: np.random.Generator,
         span = topo.m ** (topo.L - 1)  # copy 0 of the top level
     else:
         span = max(1, int(round(n * (fraction if fraction is not None else 1 / 8))))
-    src = _sources(n, msgs_per_node)
-    dst = rng.integers(0, span, size=src.shape[0], dtype=np.int64)
+    src = _perm_sources(msgs_per_node, gidx)
+    dst = hash_randint(gidx, span, _tsalt(seed, "same_copy", "dst"))
     return src, dst
 
 
-def _bursty(topo, msgs_per_node: int, rng: np.random.Generator,
-            burst_fraction: float = 1 / 8, burst_factor: int = 4):
-    """Bursty traffic: a random ``burst_fraction`` of nodes each fire
+def _bursty_senders(topo, seed: int, burst_fraction: float = 1 / 8) -> np.ndarray:
+    """The burst set: a pseudorandom ``burst_fraction`` of the nodes, in
+    ascending id order (O(n/8) state, recomputed per chunk)."""
+    k = max(1, int(round(burst_fraction * topo.n)))
+    return np.sort(pseudo_permutation(np.arange(k, dtype=np.int64), topo.n,
+                                      _tsalt(seed, "bursty", "senders")))
+
+
+def _bursty_chunk(topo, msgs_per_node: int, seed: int, gidx: np.ndarray,
+                  burst_fraction: float = 1 / 8, burst_factor: int = 4):
+    """Bursty traffic: a pseudorandom ``burst_fraction`` of nodes each fire
     ``burst_factor * msgs_per_node`` messages at uniform destinations; the
-    remaining nodes are silent."""
-    n = topo.n
-    senders = rng.choice(n, size=max(1, int(round(burst_fraction * n))), replace=False)
-    src = np.repeat(np.sort(senders).astype(np.int64), burst_factor * msgs_per_node)
-    dst = rng.integers(0, n, size=src.shape[0], dtype=np.int64)
+    remaining nodes are silent.  Messages arrive clustered by sender (the
+    per-sender burst occupies a contiguous index range)."""
+    senders = _bursty_senders(topo, seed, burst_fraction)
+    src = senders[gidx // (burst_factor * msgs_per_node)]
+    dst = hash_randint(gidx, topo.n, _tsalt(seed, "bursty", "dst"))
     return src, dst
+
+
+def _bursty_count(topo, msgs_per_node: int,
+                  burst_fraction: float = 1 / 8, burst_factor: int = 4) -> int:
+    return max(1, int(round(burst_fraction * topo.n))) * burst_factor * msgs_per_node
 
 
 SCENARIOS: dict[str, TrafficScenario] = {
     s.name: s
     for s in [
         TrafficScenario("uniform", "uniform permutation (the paper's Sec. III traffic)",
-                        _uniform, valiant_level=None),
+                        _uniform_chunk, valiant_level=None),
         TrafficScenario("hotspot", "incast: a 1/64 hot set draws half of all traffic",
-                        _hotspot, valiant_level="global"),
+                        _hotspot_chunk, valiant_level="global"),
         TrafficScenario("transpose", "digit/coordinate-reversal permutation",
-                        _transpose, valiant_level="global"),
+                        _transpose_chunk, valiant_level="global"),
         TrafficScenario("same_copy", "all nodes flood one level-(L-1) copy",
-                        _same_copy, valiant_level="global"),
+                        _same_copy_chunk, valiant_level="global"),
         TrafficScenario("bursty", "1/8 of nodes burst at 4x rate, the rest silent",
-                        _bursty, valiant_level="global"),
+                        _bursty_chunk, valiant_level="global", count=_bursty_count),
     ]
 }
 
 
+def _traffic_seed(rng: "np.random.Generator | int") -> int:
+    """Accept either an int seed (preferred — the counter-hash generators
+    are keyed on it directly) or a legacy ``np.random.Generator`` (one
+    draw derives the int seed, deterministically in the generator state)."""
+    if isinstance(rng, np.random.Generator):
+        return int(rng.integers(0, np.iinfo(np.int64).max))
+    return int(rng)
+
+
 def make_traffic(topo, scenario: "TrafficScenario | str", msgs_per_node: int,
                  rng: "np.random.Generator | int" = 0):
-    """Generate ``(src, dst)`` for a scenario (by object or registry name)."""
+    """Generate ``(src, dst)`` for a scenario (by object or registry name) —
+    the materialised form of the :func:`iter_traffic` stream (identical
+    values, one chunk)."""
     if isinstance(scenario, str):
         scenario = SCENARIOS[scenario]
-    if not isinstance(rng, np.random.Generator):
-        rng = np.random.default_rng(rng)
-    src, dst = scenario.generate(topo, msgs_per_node, rng)
+    seed = _traffic_seed(rng)
+    total = scenario.count(topo, msgs_per_node)
+    gidx = np.arange(total, dtype=np.int64)
+    src, dst = scenario.chunk(topo, msgs_per_node, seed, gidx)
     return np.asarray(src, dtype=np.int64), np.asarray(dst, dtype=np.int64)
 
 
 def iter_traffic(topo, scenario: "TrafficScenario | str", msgs_per_node: int,
-                 rng: "np.random.Generator | int" = 0, chunk_size: int = 1 << 20):
+                 rng: "np.random.Generator | int" = 0, chunk_size: int = 1 << 20
+                 ) -> "Iterator[tuple[int, np.ndarray, np.ndarray]]":
     """Chunk-yielding traffic iterator: ``(start, src_chunk, dst_chunk)``
-    views over the scenario's endpoint arrays, for callers that feed a
-    streaming consumer (ingest pipelines, external replayers).
-
-    The endpoints themselves are drawn once — they are O(n_messages)
-    int64, which is the one per-message array the streaming engines keep;
-    chunk boundaries never change the traffic, mirroring the engines'
-    chunk-size-invariance contract."""
+    per chunk, drawn lazily — peak memory is O(chunk_size), never
+    O(n_messages).  Each chunk is a pure counter-hash function of
+    ``(seed, scenario, global index)``, so the concatenated stream is
+    bit-identical for every ``chunk_size`` (including a trailing partial
+    chunk) and equals :func:`make_traffic` for the same seed."""
     if chunk_size <= 0:
         raise ValueError(f"chunk_size must be positive, got {chunk_size}")
-    src, dst = make_traffic(topo, scenario, msgs_per_node, rng)
-    for start in range(0, src.shape[0], chunk_size):
-        yield start, src[start : start + chunk_size], dst[start : start + chunk_size]
+    if isinstance(scenario, str):
+        scenario = SCENARIOS[scenario]
+    seed = _traffic_seed(rng)
+    total = scenario.count(topo, msgs_per_node)
+    for start in range(0, total, chunk_size):
+        stop = min(start + chunk_size, total)
+        gidx = np.arange(start, stop, dtype=np.int64)
+        src, dst = scenario.chunk(topo, msgs_per_node, seed, gidx)
+        yield start, np.asarray(src, dtype=np.int64), np.asarray(dst, dtype=np.int64)
 
 
 def _resolve_valiant(topo: CLEXTopology, scenario: TrafficScenario,
                      valiant: "str | int | bool | None") -> "int | None":
-    if valiant == "auto":
+    """Resolve the ``valiant=`` knob to a randomization level (or None).
+
+    ``None``/``False`` disable; ``True``/``"global"`` mean whole-machine
+    (level L); an *int* k forces level min(k, L).  The checks are
+    isinstance-guarded because Python bools alias small ints (1 == True,
+    0 == False): ``valiant=1`` must mean level 1, not global, and
+    ``valiant=0`` must mean level 0, not disabled."""
+    if isinstance(valiant, str) and valiant == "auto":
         valiant = scenario.valiant_level
-    if valiant in (False, None):
+    if valiant is None or (isinstance(valiant, bool) and not valiant):
         return None
-    if valiant in (True, "global"):
+    if valiant is True or (isinstance(valiant, str) and valiant == "global"):
         return topo.L
     return min(int(valiant), topo.L)
+
+
+def _derive_seeds(seed: int) -> tuple[int, int]:
+    """The one place the scenario seed splits: traffic endpoints are drawn
+    with ``seed`` itself, the routing engine runs with ``seed + 1`` — so
+    the two streams never collide, and golden and streaming engines (which
+    share the traffic seed but use their RNGs differently) consume
+    *identical* traffic for the same scenario seed."""
+    seed = int(seed)
+    return seed, seed + 1
 
 
 def run_clex_scenario(
@@ -214,12 +293,15 @@ def run_clex_scenario(
     """Drive the CLEX simulator through a scenario.  ``valiant='auto'`` uses
     the scenario's recommended randomization; ``False`` disables it; an int
     or ``'global'`` forces a level.  ``engine`` picks the simulator engine
-    ('golden', 'streaming', or a :class:`~.sim_engine.SimEngine`)."""
+    ('golden', 'streaming', or a :class:`~.sim_engine.SimEngine`); traffic
+    reaches the engine as an :func:`iter_traffic` chunk stream, so the
+    streaming engine never materialises the full endpoint arrays."""
     if isinstance(scenario, str):
         scenario = SCENARIOS[scenario]
-    src, dst = make_traffic(topo, scenario, msgs_per_node, np.random.default_rng(seed))
+    traffic_seed, engine_seed = _derive_seeds(seed)
     return get_engine(engine).run_clex(
-        topo, msgs_per_node, mode=mode, seed=seed + 1, src=src, dst=dst,
+        topo, msgs_per_node, mode=mode, seed=engine_seed,
+        traffic=iter_traffic(topo, scenario, msgs_per_node, traffic_seed),
         valiant_level=_resolve_valiant(topo, scenario, valiant),
         faults=faults, audit=audit,
     )
@@ -233,15 +315,18 @@ def run_torus_scenario(
     max_rounds: int = 100000,
     engine="golden",
 ):
-    """Drive the torus DOR baseline through the same scenario.  The golden
+    """Drive the torus DOR baseline through the same scenario (same
+    :func:`_derive_seeds` split as :func:`run_clex_scenario`).  The golden
     engine returns :class:`~.torus_sim.TorusSimResult` (realised queueing
     rounds); the streaming engine :class:`~.torus_sim.TorusStreamResult`
     (exact hops + link-load / completion lower bounds)."""
     if isinstance(scenario, str):
         scenario = SCENARIOS[scenario]
-    src, dst = make_traffic(topo, scenario, msgs_per_node, np.random.default_rng(seed))
+    traffic_seed, engine_seed = _derive_seeds(seed)
     return get_engine(engine).run_torus(
-        topo, msgs_per_node, seed=seed + 1, src=src, dst=dst, max_rounds=max_rounds,
+        topo, msgs_per_node, seed=engine_seed,
+        traffic=iter_traffic(topo, scenario, msgs_per_node, traffic_seed),
+        max_rounds=max_rounds,
     )
 
 
@@ -259,7 +344,8 @@ def scenario_matrix(
     CLEX run, the Valiant-randomized run (where the scenario recommends
     one), and the torus DOR baseline.  With ``engine='streaming'`` the
     torus columns switch to the exact-hops / completion-lower-bound form
-    (no realised queueing schedule at paper scale)."""
+    (no realised queueing schedule at paper scale).  Every cell runs under
+    a tracer span carrying the message count and a peak-RSS gauge."""
     obs = get_obs()
     rows = []
     for name in scenarios or list(SCENARIOS):
@@ -287,7 +373,7 @@ def scenario_matrix(
                     "clex_valiant_max_load_l1": round(val.levels[1].max_avg_load, 2),
                 })
             tor = run_torus_scenario(torus, sc, msgs_per_node, seed, engine=engine)
-            if isinstance(tor, TorusSimResult):
+            if hasattr(tor, "avg_rounds"):  # golden TorusSimResult
                 row.update({
                     "torus_avg_rds": round(tor.avg_rounds, 2),
                     "torus_max_rds": tor.max_rounds,
@@ -303,7 +389,11 @@ def scenario_matrix(
                     "rounds_gain_vs_torus_lb": round(
                         tor.completion_rounds_lb / max(plain.sum_avg_rounds, 1e-9), 2),
                 })
+            if faults is not None:
+                row["dropped_dead_pairs"] = plain.n_dropped_dead
             span.set(n_messages=plain.n_messages)
+            if obs.enabled:
+                obs.registry.gauge("sim.matrix.peak_rss_mb").set(_peak_rss_mb())
         rows.append(row)
     return rows
 
@@ -329,6 +419,8 @@ class AllToAllResult:
     n_dropped_dead: int = 0
     n_patched: int = 0  # broken flood paths rerouted via the p2p algorithm
     fault_summary: dict | None = None
+    engine: str = "golden"
+    method: str = "enumerated"  # "enumerated" pairs or "closed_form" (streaming, large n)
 
     def row(self) -> dict:
         return {
@@ -359,6 +451,7 @@ def simulate_all_to_all(
     faults: FaultSet | None = None,
     seed: int = 0,
     max_nodes: int = 2048,
+    engine="golden",
 ) -> AllToAllResult:
     """Simulate full all-to-all (one message per ordered node pair) under the
     Sec. II-C flooding schedule with asymmetric per-level bandwidth.
@@ -376,7 +469,26 @@ def simulate_all_to_all(
     whose path touches a dead node/edge are rerouted by the fault-aware
     point-to-point algorithm instead (counted as ``n_patched``); live-pair
     delivery stays 100%.
+
+    ``engine='golden'`` materialises all n^2 pairs (``max_nodes`` guard);
+    ``engine='streaming'`` chunks the pair space with bincount
+    accumulators and switches to the exact closed form at paper scale —
+    see :func:`~.streaming.simulate_all_to_all_streaming`.
     """
+    return get_engine(engine).run_all_to_all(
+        topo, bandwidth=bandwidth, faults=faults, seed=seed, max_nodes=max_nodes,
+    )
+
+
+def _all_to_all_golden(
+    topo: CLEXTopology,
+    bandwidth: dict | None = None,
+    faults: FaultSet | None = None,
+    seed: int = 0,
+    max_nodes: int = 2048,
+) -> AllToAllResult:
+    """The golden (explicit per-pair) all-to-all — the reference the
+    streaming counterpart is pinned against at small n."""
     n, m, L = topo.n, topo.m, topo.L
     if n > max_nodes:
         raise ValueError(f"explicit all-to-all only for n <= {max_nodes} (got {n})")
@@ -410,7 +522,7 @@ def simulate_all_to_all(
     # phase 1: clique edges (messages whose clique hop is a no-op stay put)
     moved = (pos[1] != pos[0]) & ok
     if moved.any():
-        _, counts = np.unique(pos[0][moved] * np.int64(n) + pos[1][moved],
+        _, counts = np.unique(flood_edge_keys(topo, pos, dst, 1)[moved],
                               return_counts=True)
         max_loads[1] = int(counts.max())
         if faults is None:
@@ -418,9 +530,7 @@ def simulate_all_to_all(
     else:
         max_loads[1] = 0
     for level in range(2, L + 1):
-        sel = ok
-        edge = digit(dst, level - 2, m)
-        keys = pos[level - 1][sel] * np.int64(m) + edge[sel]
+        keys = flood_edge_keys(topo, pos, dst, level)[ok]
         _, counts = np.unique(keys, return_counts=True)
         max_loads[level] = int(counts.max()) if counts.size else 0
         if faults is None:
@@ -457,6 +567,8 @@ def simulate_all_to_all(
         n_dropped_dead=n_dropped,
         n_patched=n_patched,
         fault_summary=faults.describe() if faults is not None else None,
+        engine="golden",
+        method="enumerated",
     )
 
 

@@ -24,7 +24,12 @@ import abc
 import numpy as np
 
 from .simulator import SimulationResult, simulate_point_to_point
-from .streaming import DEFAULT_CHUNK, simulate_point_to_point_streaming
+from .streaming import (
+    DEFAULT_CHUNK,
+    DEFAULT_MAX_PAIRS,
+    simulate_all_to_all_streaming,
+    simulate_point_to_point_streaming,
+)
 from .topology import CLEXTopology, FaultSet, TorusTopology
 from .torus_sim import (
     TorusSimResult,
@@ -36,10 +41,30 @@ from .torus_sim import (
 __all__ = ["SimEngine", "GoldenEngine", "StreamingEngine", "get_engine"]
 
 
+def _materialize(traffic) -> tuple[np.ndarray, np.ndarray]:
+    """Concatenate a ``(start, src, dst)`` chunk stream into full endpoint
+    arrays — how the golden engine (which is per-message anyway) consumes
+    an :func:`~.scenarios.iter_traffic` stream."""
+    parts = [(np.asarray(s, dtype=np.int64), np.asarray(d, dtype=np.int64))
+             for _, s, d in traffic]
+    if not parts:
+        empty = np.zeros(0, dtype=np.int64)
+        return empty, empty
+    return (np.concatenate([p[0] for p in parts]),
+            np.concatenate([p[1] for p in parts]))
+
+
 class SimEngine(abc.ABC):
     """Routing/statistics contract extracted from ``ClexMachine`` +
     ``simulate_point_to_point``: run a whole scenario, return the Tables
-    I-IV statistics object."""
+    I-IV statistics object.
+
+    Traffic enters each entry point as explicit ``src``/``dst`` arrays,
+    or as ``traffic=`` — an iterable of ``(start, src_chunk, dst_chunk)``
+    pieces (:func:`~.scenarios.iter_traffic`).  The golden engine
+    concatenates the stream (it is per-message anyway); the streaming
+    engine consumes it chunk-by-chunk, so an O(chunk) generator keeps
+    peak memory O(chunk) end-to-end."""
 
     name: str = "abstract"
 
@@ -55,6 +80,7 @@ class SimEngine(abc.ABC):
         valiant_level: int | None = None,
         faults: FaultSet | None = None,
         audit: bool = False,
+        traffic=None,
     ) -> SimulationResult:
         """Route point-to-point traffic through A(L) on ``topo``."""
 
@@ -67,8 +93,26 @@ class SimEngine(abc.ABC):
         src: np.ndarray | None = None,
         dst: np.ndarray | None = None,
         max_rounds: int = 100000,
+        traffic=None,
     ) -> TorusSimResult | TorusStreamResult:
         """Route the same traffic through the DOR torus baseline."""
+
+    @abc.abstractmethod
+    def run_all_to_all(
+        self,
+        topo: CLEXTopology,
+        bandwidth: dict | None = None,
+        faults: FaultSet | None = None,
+        seed: int = 0,
+        max_nodes: int = 2048,
+        max_pairs: int | None = None,
+    ):
+        """Run the Sec. II-C all-to-all flooding schedule on ``topo``.
+
+        ``max_nodes`` guards the golden engine's explicit n^2 pair
+        materialisation; ``max_pairs`` is the streaming engine's chunked
+        pair-enumeration budget (above it, fault-free runs use the exact
+        closed form)."""
 
 
 class GoldenEngine(SimEngine):
@@ -77,16 +121,32 @@ class GoldenEngine(SimEngine):
     name = "golden"
 
     def run_clex(self, topo, msgs_per_node, mode="dense", seed=0, src=None, dst=None,
-                 valiant_level=None, faults=None, audit=False):
+                 valiant_level=None, faults=None, audit=False, traffic=None):
+        if traffic is not None:
+            if src is not None or dst is not None:
+                raise ValueError("pass either src/dst arrays or traffic=, not both")
+            src, dst = _materialize(traffic)
         return simulate_point_to_point(
             topo, msgs_per_node, mode=mode, seed=seed, src=src, dst=dst,
             valiant_level=valiant_level, faults=faults, audit=audit,
         )
 
     def run_torus(self, topo, msgs_per_node, seed=0, src=None, dst=None,
-                  max_rounds=100000):
+                  max_rounds=100000, traffic=None):
+        if traffic is not None:
+            if src is not None or dst is not None:
+                raise ValueError("pass either src/dst arrays or traffic=, not both")
+            src, dst = _materialize(traffic)
         return simulate_torus_dor(
             topo, msgs_per_node, seed=seed, max_rounds=max_rounds, src=src, dst=dst,
+        )
+
+    def run_all_to_all(self, topo, bandwidth=None, faults=None, seed=0,
+                       max_nodes=2048, max_pairs=None):
+        from .scenarios import _all_to_all_golden  # deferred: scenarios imports us
+
+        return _all_to_all_golden(
+            topo, bandwidth=bandwidth, faults=faults, seed=seed, max_nodes=max_nodes,
         )
 
 
@@ -101,18 +161,26 @@ class StreamingEngine(SimEngine):
         self.chunk_size = chunk_size
 
     def run_clex(self, topo, msgs_per_node, mode="dense", seed=0, src=None, dst=None,
-                 valiant_level=None, faults=None, audit=False):
+                 valiant_level=None, faults=None, audit=False, traffic=None):
         return simulate_point_to_point_streaming(
             topo, msgs_per_node, mode=mode, seed=seed, src=src, dst=dst,
             valiant_level=valiant_level, faults=faults, audit=audit,
-            chunk_size=self.chunk_size,
+            chunk_size=self.chunk_size, traffic=traffic,
         )
 
     def run_torus(self, topo, msgs_per_node, seed=0, src=None, dst=None,
-                  max_rounds=100000):
+                  max_rounds=100000, traffic=None):
         return simulate_torus_dor_streaming(
             topo, msgs_per_node, seed=seed, src=src, dst=dst,
-            chunk_size=max(1, min(self.chunk_size, 1 << 18)),
+            chunk_size=max(1, min(self.chunk_size, 1 << 18)), traffic=traffic,
+        )
+
+    def run_all_to_all(self, topo, bandwidth=None, faults=None, seed=0,
+                       max_nodes=2048, max_pairs=None):
+        return simulate_all_to_all_streaming(
+            topo, bandwidth=bandwidth, faults=faults, seed=seed,
+            chunk_size=self.chunk_size,
+            max_pairs=DEFAULT_MAX_PAIRS if max_pairs is None else max_pairs,
         )
 
 

@@ -182,6 +182,17 @@ def _ring_dist_dir(cur: np.ndarray, dst: np.ndarray, k: int) -> tuple[np.ndarray
     return dist.astype(np.int64), sgn.astype(np.int64)
 
 
+def _rechunk_traffic(traffic, chunk_size: int):
+    """Re-slice an iterable of ``(start, src, dst)`` traffic chunks to at
+    most ``chunk_size`` messages per piece (the statistics here are
+    additive, so the re-slicing is observationally free)."""
+    for _, src, dst in traffic:
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        for off in range(0, src.shape[0], chunk_size):
+            yield src[off : off + chunk_size], dst[off : off + chunk_size]
+
+
 def simulate_torus_dor_streaming(
     topo: TorusTopology,
     msgs_per_node: int,
@@ -189,6 +200,7 @@ def simulate_torus_dor_streaming(
     src: np.ndarray | None = None,
     dst: np.ndarray | None = None,
     chunk_size: int = 1 << 18,
+    traffic=None,
 ) -> TorusStreamResult:
     """Streaming counterpart of :func:`simulate_torus_dor` for paper-scale
     n: vectorised per-dimension distance arithmetic plus a directed-link
@@ -198,26 +210,31 @@ def simulate_torus_dor_streaming(
 
     Traffic defaults to the same uniform permutation (bit-identical to the
     golden DOR simulator for the same seed), so ``avg_hops`` matches the
-    golden engine's exactly; rounds are reported as the completion lower
-    bound rather than a realised queueing schedule."""
-    rng = np.random.default_rng(seed)
+    golden engine's exactly; ``traffic=`` accepts a ``(start, src, dst)``
+    chunk stream (:func:`~.scenarios.iter_traffic`) consumed lazily — the
+    statistics are pure per-message arithmetic plus additive histograms,
+    so any chunking yields identical results.  Rounds are reported as the
+    completion lower bound rather than a realised queueing schedule."""
     n = topo.n
-    if src is None or dst is None:
-        src = np.repeat(np.arange(n, dtype=np.int64), msgs_per_node)
-        dst = src.copy()
-        rng.shuffle(dst)
-    src = np.asarray(src, dtype=np.int64)
-    dst = np.asarray(dst, dtype=np.int64)
-    nmsg = src.shape[0]
+    if traffic is not None and (src is not None or dst is not None):
+        raise ValueError("pass either src/dst arrays or traffic=, not both")
+    if traffic is None:
+        if src is None or dst is None:
+            rng = np.random.default_rng(seed)
+            src = np.repeat(np.arange(n, dtype=np.int64), msgs_per_node)
+            dst = src.copy()
+            rng.shuffle(dst)
+        traffic = ((0, src, dst),)
     ks = (topo.k1, topo.k2, topo.k3)
 
     loads = np.zeros(n * 6, dtype=np.int64)
     hops_total = 0
     max_hops = 0
-    for start in range(0, nmsg, chunk_size):
-        stop = min(start + chunk_size, nmsg)
-        sx, sy, sz = (c.astype(np.int64) for c in topo.node_xyz(src[start:stop]))
-        dx, dy, dz = (c.astype(np.int64) for c in topo.node_xyz(dst[start:stop]))
+    nmsg = 0
+    for s_chunk, d_chunk in _rechunk_traffic(traffic, chunk_size):
+        nmsg += s_chunk.shape[0]
+        sx, sy, sz = (c.astype(np.int64) for c in topo.node_xyz(s_chunk))
+        dx, dy, dz = (c.astype(np.int64) for c in topo.node_xyz(d_chunk))
         d0, s0 = _ring_dist_dir(sx, dx, ks[0])
         d1, s1 = _ring_dist_dir(sy, dy, ks[1])
         d2, s2 = _ring_dist_dir(sz, dz, ks[2])

@@ -53,10 +53,33 @@ def test_benchmarks_run_paper_scale_smoke(tmp_path, capsys):
         on_disk["factors"])
     assert on_disk["torus"]["completion_rounds_lb"] >= on_disk["torus"]["max_hops"]
     assert on_disk["peak_rss_mb"] > 0
+    # scenario x fault matrix: every scenario appears fault-free and
+    # faulted, streaming-engine torus columns, within the RSS budget the
+    # full-scale run is also held to (acceptance: < 3 GB at n = 32^4)
+    mat = on_disk["matrix"]
+    from repro.core import SCENARIOS
+
+    assert {r["scenario"] for r in mat["rows"]} == set(SCENARIOS)
+    assert {r["faults"] for r in mat["rows"]} == {"none",
+                                                  f"node_rate={mat['node_rate']}"}
+    assert len(mat["rows"]) == 2 * len(SCENARIOS)
+    for r in mat["rows"]:
+        assert {"clex_sum_avg_rds", "torus_rounds_lb",
+                "rounds_gain_vs_torus_lb"} <= set(r)
+        if r["faults"] != "none":
+            assert r["dropped_dead_pairs"] >= 0
+    assert mat["peak_rss_mb"] < 3072
+    # all-to-all: clean + faulted rows with the engine/method provenance
+    a2a = on_disk["all_to_all"]
+    assert a2a["clean"]["method"] in ("enumerated", "closed_form")
+    assert a2a["clean"]["rounds_vs_bound"] <= 1.2
+    assert a2a["faulty"]["method"] == "enumerated"
     # no repo-root sync from a tmp outdir; CSV rows still emitted
     lines = [l for l in capsys.readouterr().out.splitlines() if l.strip()]
     assert any(l.startswith("paper_scale_clex_") for l in lines)
     assert any(l.startswith("paper_scale_torus_") for l in lines)
+    assert any(l.startswith("paper_matrix_") for l in lines)
+    assert any(l.startswith("paper_a2a") for l in lines)
 
 
 def test_make_report_renders_paper_scale_section(tmp_path, monkeypatch):
@@ -76,6 +99,8 @@ def test_make_report_renders_paper_scale_section(tmp_path, monkeypatch):
     sim = report.read_text().split(SIM_BEGIN, 1)[1].split(SIM_END, 1)[0]
     assert "Paper scale (streaming engine" in sim
     assert "bandwidth utilization factor" in sim
+    assert "Scenario × fault matrix" in sim
+    assert "All-to-all flooding (streaming engine)" in sim
 
 
 def test_serving_bench_tiny_emits_wellformed_json(tmp_path):

@@ -233,3 +233,92 @@ def test_golden_engine_wraps_audit():
     res = GoldenEngine().run_clex(topo, 1, mode="dense", seed=0, audit=True)
     assert res.audit is not None
     assert res.engine == "golden"
+
+
+# --------------------------------------------------- all-to-all parity
+def test_streaming_a2a_matches_golden_exactly():
+    """Enumerated streaming all-to-all reproduces the golden engine's
+    result field-for-field at small n: per-level loads (exactly n/m on
+    every used edge), rounds per level, hop statistics, and the
+    rounds-vs-analytic-bound ratio."""
+    from repro.core import simulate_all_to_all
+    from repro.core.scenarios import asymmetric_bandwidth
+
+    for m, L in [(4, 2), (8, 2), (4, 3)]:
+        topo = CLEXTopology(m, L)
+        bw = asymmetric_bandwidth(topo)
+        g = simulate_all_to_all(topo, bandwidth=bw, engine="golden")
+        s = simulate_all_to_all(topo, bandwidth=bw, engine="streaming")
+        assert s.engine == "streaming" and s.method == "enumerated"
+        assert s.rounds_per_level == g.rounds_per_level
+        assert s.total_rounds == g.total_rounds
+        assert s.max_edge_load_per_level == g.max_edge_load_per_level
+        assert s.max_hops == g.max_hops
+        assert s.avg_hops == pytest.approx(g.avg_hops)
+        assert s.rounds_vs_bound == pytest.approx(g.rounds_vs_bound)
+        assert s.n_messages == g.n_messages == topo.n * topo.n
+        assert s.uniform_load and g.uniform_load
+        assert s.max_edge_load_per_level == {
+            lvl: topo.n // topo.m for lvl in range(1, topo.L + 1)
+        }
+
+
+def test_streaming_a2a_closed_form_matches_enumerated():
+    """Forcing the pair budget to 1 switches the streaming engine to the
+    exact closed form; the result is bit-identical to the enumerated pass
+    (the closed form *is* the enumeration, summed analytically)."""
+    from repro.core.sim_engine import StreamingEngine
+
+    eng = StreamingEngine()
+    for m, L in [(4, 2), (8, 2), (4, 3)]:
+        topo = CLEXTopology(m, L)
+        enum = eng.run_all_to_all(topo)
+        closed = eng.run_all_to_all(topo, max_pairs=1)
+        assert enum.method == "enumerated" and closed.method == "closed_form"
+        assert closed.total_rounds == enum.total_rounds
+        assert closed.rounds_per_level == enum.rounds_per_level
+        assert closed.max_edge_load_per_level == enum.max_edge_load_per_level
+        assert closed.max_hops == enum.max_hops
+        assert closed.avg_hops == enum.avg_hops  # exact float parity
+        assert closed.uniform_load
+
+
+def test_streaming_a2a_chunk_size_invariance():
+    from repro.core.sim_engine import StreamingEngine
+
+    topo = CLEXTopology(4, 2)
+    base = StreamingEngine(chunk_size=1 << 20).run_all_to_all(topo)
+    for chunk in (1, 7):
+        res = StreamingEngine(chunk_size=chunk).run_all_to_all(topo)
+        assert res.rounds_per_level == base.rounds_per_level
+        assert res.avg_hops == base.avg_hops
+
+
+def test_streaming_a2a_under_faults_delivers_live_pairs():
+    """Dead-node all-to-all on the streaming engine: every live ordered
+    pair is delivered (broken flood paths patched by the fault-aware p2p
+    reroute), and the accounting matches the golden engine's."""
+    from repro.core import simulate_all_to_all
+
+    topo = CLEXTopology(4, 3)
+    faults = FaultSet.sample(topo, node_rate=0.05, edge_rate=0.05,
+                             rng=np.random.default_rng(3))
+    g = simulate_all_to_all(topo, faults=faults, seed=3, engine="golden")
+    s = simulate_all_to_all(topo, faults=faults, seed=3, engine="streaming")
+    assert s.n_messages + s.n_dropped_dead == topo.n * topo.n
+    assert s.n_messages == g.n_messages
+    assert s.n_dropped_dead == g.n_dropped_dead
+    assert s.n_patched == g.n_patched
+    assert s.max_hops <= topo.L
+    assert s.rounds_vs_bound <= 1.2
+
+
+def test_streaming_a2a_closed_form_refuses_faults():
+    """Above the pair budget the closed form has no per-pair visibility,
+    so a faulted run must raise instead of silently dropping the faults."""
+    from repro.core.sim_engine import StreamingEngine
+
+    topo = CLEXTopology(4, 2)
+    faults = FaultSet.sample(topo, node_rate=0.1, rng=np.random.default_rng(0))
+    with pytest.raises(ValueError, match="fault"):
+        StreamingEngine().run_all_to_all(topo, faults=faults, max_pairs=1)

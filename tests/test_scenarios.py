@@ -170,3 +170,113 @@ def test_degradation_curve_acceptance():
     assert rows[0]["detours"] == 0 and rows[0]["slowdown_vs_fault_free"] == 1.0
     assert rows[-1]["dead_nodes"] == round(0.05 * topo.n)
     assert rows[-1]["detours"] > 0  # degradation is visible, not hidden
+
+
+# ------------------------------------------- streaming traffic iterator
+@pytest.mark.parametrize("chunk", [1, 7, 1 << 20])
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_iter_traffic_is_chunk_size_invariant(name, chunk):
+    """The concatenated iter_traffic stream is bit-identical for every
+    chunk size (each chunk is a pure counter-hash function of the global
+    index) and equals make_traffic for the same seed — including bursty,
+    whose sender set is a k-subset evaluated per index."""
+    from repro.core import iter_traffic
+
+    full_src, full_dst = make_traffic(CLEX, name, 3, rng=11)
+    pieces = list(iter_traffic(CLEX, name, 3, rng=11, chunk_size=chunk))
+    assert [p[0] for p in pieces] == list(range(0, full_src.shape[0], chunk))
+    assert np.array_equal(np.concatenate([p[1] for p in pieces]), full_src)
+    assert np.array_equal(np.concatenate([p[2] for p in pieces]), full_dst)
+
+
+def test_iter_traffic_last_partial_chunk():
+    """A chunk size that does not divide the message count yields a
+    trailing partial chunk (never padding, never a dropped tail)."""
+    from repro.core import iter_traffic
+
+    total = SCENARIOS["uniform"].count(CLEX, 3)
+    chunk = 7
+    assert total % chunk != 0  # the interesting case
+    pieces = list(iter_traffic(CLEX, "uniform", 3, rng=0, chunk_size=chunk))
+    assert all(p[1].shape[0] == chunk for p in pieces[:-1])
+    assert pieces[-1][1].shape[0] == total % chunk
+    assert sum(p[1].shape[0] for p in pieces) == total
+
+
+def test_iter_traffic_rejects_bad_chunk_size():
+    from repro.core import iter_traffic
+
+    with pytest.raises(ValueError, match="chunk_size"):
+        next(iter_traffic(CLEX, "uniform", 2, rng=0, chunk_size=0))
+
+
+# ------------------------------------------------ valiant knob resolution
+def test_resolve_valiant_int_one_is_level_one_not_global():
+    """Regression: Python bools alias small ints (1 == True), so a naive
+    equality check turned ``valiant=1`` into whole-machine randomization.
+    An explicit integer level must be honoured as that level."""
+    from repro.core.scenarios import _resolve_valiant
+
+    topo = CLEXTopology(4, 3)
+    sc = SCENARIOS["hotspot"]
+    assert _resolve_valiant(topo, sc, 1) == 1
+    assert _resolve_valiant(topo, sc, 2) == 2
+    assert _resolve_valiant(topo, sc, True) == topo.L
+    assert _resolve_valiant(topo, sc, "global") == topo.L
+    assert _resolve_valiant(topo, sc, 99) == topo.L  # clamped to L
+
+
+def test_resolve_valiant_int_zero_is_not_disabled():
+    """Regression twin: 0 == False, so ``valiant=0`` used to silently
+    disable randomization; it must resolve to level 0 (an explicit int),
+    while False/None still disable."""
+    from repro.core.scenarios import _resolve_valiant
+
+    topo = CLEXTopology(4, 3)
+    sc = SCENARIOS["hotspot"]
+    assert _resolve_valiant(topo, sc, 0) == 0
+    assert _resolve_valiant(topo, sc, False) is None
+    assert _resolve_valiant(topo, sc, None) is None
+
+
+def test_resolve_valiant_auto_follows_scenario():
+    from repro.core.scenarios import _resolve_valiant
+
+    topo = CLEXTopology(4, 3)
+    assert _resolve_valiant(topo, SCENARIOS["uniform"], "auto") is None
+    assert _resolve_valiant(topo, SCENARIOS["hotspot"], "auto") == topo.L
+
+
+def test_valiant_level_one_routes_differently_from_global():
+    """End-to-end regression: valiant=1 restricts detours to the level-1
+    copy — a different route distribution from the whole-machine variant
+    the old bool-aliasing bug silently substituted."""
+    plain = run_clex_scenario(CLEX, "same_copy", 3, seed=0, valiant=False)
+    lvl1 = run_clex_scenario(CLEX, "same_copy", 3, seed=0, valiant=1)
+    glob = run_clex_scenario(CLEX, "same_copy", 3, seed=0, valiant="global")
+    assert plain.sum_avg_hops < glob.sum_avg_hops  # global pays the 2x
+    assert lvl1.sum_avg_hops != glob.sum_avg_hops  # 1 is not True/global
+    assert lvl1.sum_avg_hops > plain.sum_avg_hops  # but detours happened
+
+
+# --------------------------------------------------------- seed plumbing
+def test_derive_seeds_split():
+    """Traffic endpoints draw with the scenario seed itself; the routing
+    engine runs with seed+1 — the one place the split is defined."""
+    from repro.core.scenarios import _derive_seeds
+
+    assert _derive_seeds(0) == (0, 1)
+    assert _derive_seeds(41) == (41, 42)
+
+
+def test_same_seed_same_traffic_across_engines():
+    """Both engines consume the same iter_traffic stream for the same
+    scenario seed, so deterministic statistics (fault-free hop totals at
+    levels >= 2, message counts) agree exactly across engines."""
+    g = run_clex_scenario(CLEX, "transpose", 3, seed=5, engine="golden")
+    s = run_clex_scenario(CLEX, "transpose", 3, seed=5, engine="streaming")
+    assert g.n_messages == s.n_messages
+    # level-1 relay choices are engine-local randomness; levels >= 2 are
+    # deterministic functions of the (shared) traffic stream
+    for lvl in range(2, CLEX.L + 1):
+        assert g.levels[lvl].avg_hops == pytest.approx(s.levels[lvl].avg_hops)
